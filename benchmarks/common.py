@@ -1,0 +1,30 @@
+"""Shared benchmark plumbing: timing + CSV emission."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Iterable, List, Tuple
+
+
+class Bench:
+    """Collects (name, us_per_call, derived) rows for benchmarks.run."""
+
+    def __init__(self):
+        self.rows: List[Tuple[str, float, str]] = []
+
+    def timeit(self, name: str, fn: Callable[[], Dict], derived_keys=()):
+        t0 = time.perf_counter()
+        out = fn() or {}
+        us = (time.perf_counter() - t0) * 1e6
+        derived = ";".join(f"{k}={out[k]:.4g}" if isinstance(out[k], float)
+                           else f"{k}={out[k]}"
+                           for k in derived_keys if k in out)
+        self.rows.append((name, us, derived))
+        return out
+
+    def add(self, name: str, us: float, derived: str = ""):
+        self.rows.append((name, us, derived))
+
+    def emit(self) -> None:
+        for name, us, derived in self.rows:
+            print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,78 @@
+"""Aggregate dry-run JSONs into the §Dry-run / §Roofline tables."""
+
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+from typing import Dict, List
+
+
+def load(outdir: str = "results/dryrun") -> List[Dict]:
+    rows = []
+    for f in sorted(glob.glob(f"{outdir}/*.json")):
+        d = json.loads(Path(f).read_text())
+        rows.append(d)
+    return rows
+
+
+def table(outdir: str = "results/dryrun", mesh: str = "single"
+          ) -> List[Dict]:
+    rows = []
+    for d in load(outdir):
+        if d.get("mesh") != mesh:
+            continue
+        if not d.get("ok"):
+            rows.append({"arch": d["arch"], "shape": d["shape"],
+                         "ok": False, "error": d.get("error", "")[:80]})
+            continue
+        r = d["roofline"]
+        rows.append({
+            "arch": d["arch"], "shape": d["shape"], "ok": True,
+            "peak_gb": d["memory"]["peak_bytes"] / 1e9,
+            "residency_gb": r.get("residency_gb"),
+            "t_compute": r["t_compute_s"], "t_memory": r["t_memory_s"],
+            "t_collective": r["t_collective_s"],
+            "bottleneck": r["bottleneck"],
+            "useful": r["useful_flop_fraction"],
+            "roofline_fraction": r["roofline_fraction"],
+            "compile_s": d.get("compile_s"),
+        })
+    return rows
+
+
+def markdown(outdir: str = "results/dryrun", mesh: str = "single") -> str:
+    rows = table(outdir, mesh)
+    out = ["| arch | shape | XLA peak GB | est GB (TPU) | t_comp s "
+           "| t_mem s | t_coll s | bottleneck | useful | roofline frac |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if not r["ok"]:
+            out.append(f"| {r['arch']} | {r['shape']} | FAIL: "
+                       f"{r['error']} | | | | | | |")
+            continue
+        res = r.get("residency_gb")
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['peak_gb']:.1f} "
+            f"| {res if res is not None else '-'} "
+            f"| {r['t_compute']:.4f} | {r['t_memory']:.4f} "
+            f"| {r['t_collective']:.4f} | {r['bottleneck']} "
+            f"| {r['useful']:.2f} | {r['roofline_fraction']:.3f} |")
+    return "\n".join(out)
+
+
+def summary(outdir: str = "results/dryrun") -> Dict:
+    singles = [r for r in table(outdir, "single") if r.get("ok")]
+    multis = [r for r in table(outdir, "multi") if r.get("ok")]
+    fails = [r for r in table(outdir, "single") + table(outdir, "multi")
+             if not r.get("ok")]
+    return {
+        "cells_single_ok": len(singles),
+        "cells_multi_ok": len(multis),
+        "fails": len(fails),
+        "worst_roofline": (min(singles, key=lambda r: r["roofline_fraction"])
+                           ["arch"] if singles else ""),
+        "mean_roofline_fraction": (
+            sum(r["roofline_fraction"] for r in singles) / len(singles)
+            if singles else 0.0),
+    }

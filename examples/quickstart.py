@@ -1,0 +1,33 @@
+"""Quickstart: the paper's headline result in 40 lines.
+
+Builds the emulated WD ZN540, fills zones to varying occupancy, FINISHes
+them, and compares device-level write amplification between the fixed-zone
+baseline (ConfZNS++) and SilentZNS superblock allocation.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+from repro.core import FIXED, SUPERBLOCK, ZNSDevice, zn540
+from repro.core.workloads import dlwa_benchmark
+
+
+def main() -> None:
+    flash, zone = zn540()
+    print(f"device: {flash.n_luns} LUNs, "
+          f"{zone.zone_bytes(flash) / 2**20:.0f} MiB zones\n")
+    print(f"{'occupancy':>10} {'baseline DLWA':>14} {'SilentZNS DLWA':>15} "
+          f"{'reduction':>10}")
+    for occ in (0.1, 0.25, 0.5, 0.75, 0.9):
+        base = ZNSDevice(flash, zone, FIXED)
+        silent = ZNSDevice(flash, zone, SUPERBLOCK)
+        rb = dlwa_benchmark(base, occupancy=occ, n_zones=4)
+        rs = dlwa_benchmark(silent, occupancy=occ, n_zones=4)
+        red = (rb["dlwa"] - rs["dlwa"]) / rb["dlwa"]
+        print(f"{occ:>10.0%} {rb['dlwa']:>14.2f} {rs['dlwa']:>15.2f} "
+              f"{red:>10.1%}")
+    print("\npaper §6.2: 'reducing DLWA by up to 86.36% (10% zone "
+          "occupancy with the superblock configuration)'")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Batched serving example: prefill + decode for any assigned arch.
+
+    PYTHONPATH=src python examples/serve_decode.py [arch]
+
+Defaults to the xLSTM (recurrent decode path); try e.g.
+``deepseek-v2-236b`` to exercise the MLA absorbed-decode path (reduced
+config on CPU).
+"""
+
+import sys
+
+from repro.launch import serve
+
+
+def main() -> None:
+    arch = sys.argv[1] if len(sys.argv) > 1 else "xlstm-125m"
+    sys.argv = [sys.argv[0], "--arch", arch, "--reduced", "--batch", "4",
+                "--prompt-len", "24", "--decode-tokens", "8"]
+    serve.main()
+
+
+if __name__ == "__main__":
+    main()

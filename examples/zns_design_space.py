@@ -1,0 +1,50 @@
+"""Explore the augmented ZNS design space (paper §4/§6.3 + Table 5).
+
+Sweeps zone geometry x storage element on the paper's custom 16-LUN SSD
+and prints, per configuration: DLWA at low occupancy, interference under
+concurrent FINISH, and allocation latency -- then echoes the paper's
+per-use-case recommendations (Table 5).
+
+    PYTHONPATH=src python examples/zns_design_space.py
+"""
+
+from repro.core import (BLOCK, FIXED, PAPER_GEOMETRIES, SUPERBLOCK,
+                        ZNSDevice, custom16, hchunk, is_applicable, vchunk)
+from repro.core.workloads import (alloc_latency_benchmark, dlwa_benchmark,
+                                  interference_benchmark)
+
+ELEMENTS = (FIXED, SUPERBLOCK, BLOCK, vchunk(2), vchunk(4), hchunk(2))
+
+RECOMMENDATIONS = """
+paper Table 5 -- how to pick a configuration:
+  (A) WAL / OLTP logs           -> block/Vchunk-2, small zones, early FINISH
+  (B) LSM flushes / minor comp. -> superblock/Vchunk-4, medium zones
+  (C) large compactions/ingest  -> superblock/Vchunk-4, large zones
+  (D) mixed-lifetime ZenFS data -> block/Vchunk-2, small zones, early FINISH
+  (E) read-mostly               -> superblock/Vchunk-4, large zones
+"""
+
+
+def main() -> None:
+    flash = custom16()
+    print(f"{'geometry':>10} {'element':>11} {'DLWA@10%':>9} "
+          f"{'interf.':>8} {'alloc us':>9}")
+    for geom in PAPER_GEOMETRIES:
+        for spec in ELEMENTS:
+            if not is_applicable(spec, geom, flash):
+                continue
+            dev = ZNSDevice(flash, geom, spec, max_active=64)
+            d = dlwa_benchmark(dev, occupancy=0.10, n_zones=2)
+            dev2 = ZNSDevice(flash, geom, spec, max_active=64)
+            i = interference_benchmark(
+                dev2, concurrency=min(4, dev2.n_zones // 2))
+            dev3 = ZNSDevice(flash, geom, spec, max_active=64)
+            a = alloc_latency_benchmark(dev3, n_allocs=8)
+            print(f"{geom.describe(flash):>10} {spec.name:>11} "
+                  f"{d['dlwa']:>9.2f} {i['interference']:>8.2f} "
+                  f"{a['median_us']:>9.1f}")
+    print(RECOMMENDATIONS)
+
+
+if __name__ == "__main__":
+    main()

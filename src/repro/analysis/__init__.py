@@ -1,0 +1,1 @@
+"""Compiled-artifact analysis: collective parsing + roofline terms."""

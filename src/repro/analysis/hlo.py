@@ -1,0 +1,65 @@
+"""Collective-byte accounting over post-SPMD HLO text.
+
+``cost_analysis()`` has no collective-byte entry, so we parse the compiled
+module's text: every ``all-gather`` / ``all-reduce`` / ``reduce-scatter`` /
+``all-to-all`` / ``collective-permute`` instruction contributes its result
+shape's bytes (per-device).  Tuple-shaped results sum their elements.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+
+# e.g.  %all-reduce.5 = f32[16,128]{1,0} all-reduce(...)
+#       ROOT %t = (bf16[8,16]{...}, f32[4]{...}) all-to-all(...)
+_INSTR = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+([a-z\-]+)(\(|-start\()")
+_SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-category result bytes (per device) of every collective op."""
+    out: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = _INSTR.search(stripped)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        if op in COLLECTIVE_OPS:
+            out[op] += _shape_bytes(shape_str)
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return dict(out)
+
+
+def collective_count(hlo_text: str) -> Dict[str, int]:
+    out: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _INSTR.search(line.strip())
+        if m and m.group(2) in COLLECTIVE_OPS:
+            out[m.group(2)] += 1
+    return dict(out)

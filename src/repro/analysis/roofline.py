@@ -1,0 +1,85 @@
+"""Three-term roofline from the compiled dry-run artifact (TPU v5e).
+
+    compute    = HLO_FLOPs_per_device / peak_FLOPs
+    memory     = HLO_bytes_per_device / HBM_bw
+    collective = collective_bytes_per_device / ICI_link_bw
+
+The compiled SPMD module is per-device, so per-device quantities divided
+by per-chip peaks equal the task sheet's total/(chips * peak) formula.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+# TPU v5e-class hardware constants (task sheet)
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s per chip
+HBM_BW = 819e9                  # B/s per chip
+ICI_BW = 50e9                   # B/s per link (1 link assumed per transfer)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                # per-device HLO flops
+    hbm_bytes: float            # per-device bytes accessed
+    coll_bytes: float           # per-device collective bytes
+    model_flops: float = 0.0    # 6*N*D useful flops (per device)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_fraction(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs: how much compiled compute is useful."""
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Achievable MFU bound: useful flop-time over the bounding term."""
+        if self.t_bound == 0:
+            return 0.0
+        return (self.model_flops / PEAK_FLOPS_BF16) / self.t_bound
+
+    def report(self) -> Dict[str, float]:
+        return {
+            "flops_per_dev": self.flops,
+            "hbm_bytes_per_dev": self.hbm_bytes,
+            "coll_bytes_per_dev": self.coll_bytes,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops_per_dev": self.model_flops,
+            "useful_flop_fraction": self.useful_fraction,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops_train(n_active_params: int, n_tokens: int) -> float:
+    """6*N*D for a train step (fwd+bwd)."""
+    return 6.0 * n_active_params * n_tokens
+
+
+def model_flops_forward(n_active_params: int, n_tokens: int) -> float:
+    """2*N*D for inference forward (prefill/decode)."""
+    return 2.0 * n_active_params * n_tokens

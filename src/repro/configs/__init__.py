@@ -1,0 +1,7 @@
+"""Architecture configs: one module per assigned architecture."""
+
+from repro.configs.base import (ArchConfig, ShapeCell, get_arch, get_shape,
+                                list_archs, register, SHAPES, applicable_cells)
+
+__all__ = ["ArchConfig", "ShapeCell", "get_arch", "get_shape", "list_archs",
+           "register", "SHAPES", "applicable_cells"]

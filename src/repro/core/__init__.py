@@ -1,0 +1,24 @@
+"""SilentZNS core: the paper's contribution as a composable JAX library."""
+
+from repro.core.geometry import (FlashGeometry, ZoneGeometry, zn540,
+                                 custom16, PAPER_GEOMETRIES, MIB, KIB)
+from repro.core.elements import (ElementKind, ElementSpec, ElementLayout,
+                                 BLOCK, SUPERBLOCK, FIXED, hchunk, vchunk,
+                                 PAPER_ELEMENTS, build_layout,
+                                 elements_per_zone, groups_per_zone,
+                                 is_applicable)
+from repro.core.device import ZNSDevice, ZoneState, ZoneInfo, IOTrace
+from repro.core.allocator import (select_lowest_wear, allocate, RoundRobin,
+                                  eligible_mask)
+from repro.core import alloc_exact, metrics, timing, workloads, zns
+
+__all__ = [
+    "FlashGeometry", "ZoneGeometry", "zn540", "custom16",
+    "PAPER_GEOMETRIES", "MIB", "KIB",
+    "ElementKind", "ElementSpec", "ElementLayout", "BLOCK", "SUPERBLOCK",
+    "FIXED", "hchunk", "vchunk", "PAPER_ELEMENTS", "build_layout",
+    "elements_per_zone", "groups_per_zone", "is_applicable",
+    "ZNSDevice", "ZoneState", "ZoneInfo", "IOTrace",
+    "select_lowest_wear", "allocate", "RoundRobin", "eligible_mask",
+    "alloc_exact", "metrics", "timing", "workloads", "zns",
+]

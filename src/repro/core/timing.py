@@ -1,0 +1,123 @@
+"""FEMU-style timing model as a vectorized JAX scan (hardware adaptation).
+
+ConfZNS++/FEMU advance an event-driven clock per flash channel and LUN; we
+keep exactly the resources and latencies (program/read/erase/channel
+transfer) but execute the request stream as a ``jax.lax.scan`` over
+per-resource *busy clocks*:
+
+    start(req)  = max(channel_free[ch], lun_free[lun])
+    channel_free[ch] = start + t_xfer
+    lun_free[lun]    = start + t_xfer + t_op
+
+This reproduces what the paper measures -- throughput saturation across
+parallel units (Fig. 9) and FINISH-vs-host interference (Fig. 4b/7d,
+Table 3) -- without NVMe protocol details.  Streams from different actors
+(host writers, device FINISH padding) are merged round-robin to model
+concurrent submission queues.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.device import IOTrace
+from repro.core.geometry import FlashGeometry
+
+OP_WRITE, OP_READ, OP_ERASE = 0, 1, 2
+_OP_CODE = {"write": OP_WRITE, "read": OP_READ, "erase": OP_ERASE}
+
+
+@functools.partial(jax.jit, static_argnames=("n_luns", "n_channels"))
+def simulate(ops: jax.Array, luns: jax.Array, channels: jax.Array,
+             t_op: jax.Array, t_xfer: jax.Array,
+             n_luns: int, n_channels: int) -> Tuple[jax.Array, jax.Array]:
+    """Scan a request stream through per-LUN/per-channel busy clocks.
+
+    Args:
+      ops:      (n,) int32 op codes (indexes ``t_op``).
+      luns:     (n,) int32 LUN of each request.
+      channels: (n,) int32 channel of each request.
+      t_op:     (3,) float32 [t_prog, t_read, t_erase].
+      t_xfer:   () float32 channel transfer time.
+
+    Returns:
+      (completion_times (n,), makespan ()).
+    """
+    def step(carry, req):
+        lun_free, ch_free = carry
+        op, lun, ch = req
+        start = jnp.maximum(lun_free[lun], ch_free[ch])
+        done_xfer = start + t_xfer
+        done = done_xfer + t_op[op]
+        lun_free = lun_free.at[lun].set(done)
+        ch_free = ch_free.at[ch].set(done_xfer)
+        return (lun_free, ch_free), done
+
+    init = (jnp.zeros(n_luns, jnp.float32),
+            jnp.zeros(n_channels, jnp.float32))
+    (lun_free, _), completions = jax.lax.scan(
+        step, init, (ops, luns, channels))
+    return completions, jnp.max(lun_free)
+
+
+def run_trace(flash: FlashGeometry, traces: Sequence[IOTrace],
+              *, interleave: bool = True) -> dict:
+    """Simulate one or more IOTraces; returns timing stats.
+
+    ``interleave=True`` merges the traces round-robin (concurrent queues);
+    ``False`` concatenates them (sequential submission).
+    """
+    if not traces:
+        return {"makespan_s": 0.0, "n": 0, "throughput_pages_s": 0.0}
+    ops, luns, chans, owner = _merge(traces, interleave)
+    t_op = jnp.asarray([flash.t_prog, flash.t_read, flash.t_erase],
+                       jnp.float32)
+    completions, makespan = simulate(
+        jnp.asarray(ops), jnp.asarray(luns), jnp.asarray(chans),
+        t_op, jnp.asarray(flash.t_xfer, jnp.float32),
+        flash.n_luns, flash.n_channels)
+    completions = np.asarray(completions)
+    makespan = float(makespan)
+    out = {"makespan_s": makespan, "n": int(len(ops)),
+           "throughput_pages_s": len(ops) / makespan if makespan else 0.0}
+    # per-owner completion (owner 0 = first trace = usually the host)
+    for i in range(len(traces)):
+        sel = owner == i
+        if sel.any():
+            t = float(completions[sel].max())
+            out[f"owner{i}_makespan_s"] = t
+            out[f"owner{i}_throughput_pages_s"] = int(sel.sum()) / t if t else 0.0
+    return out
+
+
+def _merge(traces: Sequence[IOTrace], interleave: bool
+           ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    ops_l, luns_l, chans_l, owner_l = [], [], [], []
+    for i, tr in enumerate(traces):
+        n = len(tr.luns)
+        ops_l.append(np.full(n, _OP_CODE[tr.op], dtype=np.int32))
+        luns_l.append(np.asarray(tr.luns, dtype=np.int32))
+        chans_l.append(np.asarray(tr.channels, dtype=np.int32))
+        owner_l.append(np.full(n, i, dtype=np.int32))
+    if not interleave or len(traces) == 1:
+        return (np.concatenate(ops_l), np.concatenate(luns_l),
+                np.concatenate(chans_l), np.concatenate(owner_l))
+    # round-robin merge by per-stream position (models concurrent queues)
+    order_keys = np.concatenate(
+        [np.arange(len(t.luns), dtype=np.int64) * len(traces) + i
+         for i, t in enumerate(traces)])
+    perm = np.argsort(order_keys, kind="stable")
+    return (np.concatenate(ops_l)[perm], np.concatenate(luns_l)[perm],
+            np.concatenate(chans_l)[perm], np.concatenate(owner_l)[perm])
+
+
+def write_bandwidth_mib_s(flash: FlashGeometry, stats: dict,
+                          owner: int | None = None) -> float:
+    key = ("throughput_pages_s" if owner is None
+           else f"owner{owner}_throughput_pages_s")
+    return stats.get(key, 0.0) * flash.page_bytes / (1024 * 1024)

@@ -1,0 +1,154 @@
+"""The paper's benchmark workloads (§6.1) on the emulated device.
+
+* ``dlwa_benchmark``        -- fill zones to a target occupancy, FINISH,
+                               count dummy pages (Fig. 4a / 7a / 8).
+* ``interference_benchmark``-- N zones being FINISHed while the host
+                               writes N other zones (Fig. 4b / 7d, Table 3).
+* ``write_benchmark``       -- FIO-like sequential writes, varying request
+                               size and concurrent zones (Fig. 9).
+* ``alloc_latency_benchmark``-- median zone-allocation latency (Table 4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import timing
+from repro.core.device import IOTrace, ZNSDevice, ZoneState
+from repro.core.elements import ElementSpec
+from repro.core.geometry import FlashGeometry, ZoneGeometry
+
+
+def make_device(flash: FlashGeometry, zone: ZoneGeometry, spec: ElementSpec,
+                *, max_active: int = 14, alloc_impl: str = "xla") -> ZNSDevice:
+    return ZNSDevice(flash, zone, spec, max_active=max_active,
+                     alloc_impl=alloc_impl)
+
+
+# --------------------------------------------------------------------- #
+# DLWA benchmark (paper Fig. 4a, 7a, 8)
+# --------------------------------------------------------------------- #
+def dlwa_benchmark(dev: ZNSDevice, *, occupancy: float,
+                   n_zones: Optional[int] = None) -> Dict[str, float]:
+    """Fill ``n_zones`` zones to ``occupancy`` then FINISH each; report
+    dummy pages (pages 'finished') and DLWA."""
+    n_zones = n_zones or min(8, dev.n_zones)
+    pages = max(1, int(round(dev.zone_pages * occupancy)))
+    pages = min(pages, dev.zone_pages)
+    host0, dummy0 = dev.host_pages, dev.dummy_pages
+    for z in range(n_zones):
+        dev.zone_write(z, pages)
+        dev.zone_finish(z)
+    host = dev.host_pages - host0
+    dummy = dev.dummy_pages - dummy0
+    return {
+        "occupancy": occupancy,
+        "host_pages": float(host),
+        "dummy_pages": float(dummy),
+        "dummy_pages_per_zone": dummy / n_zones,
+        "dlwa": (host + dummy) / host if host else 1.0,
+    }
+
+
+# --------------------------------------------------------------------- #
+# Interference benchmark (paper Fig. 4b, 7d, Table 3)
+# --------------------------------------------------------------------- #
+def interference_benchmark(dev: ZNSDevice, *, concurrency: int,
+                           fill_occupancy: float = 0.4,
+                           host_pages_per_zone: Optional[int] = None
+                           ) -> Dict[str, float]:
+    """``concurrency`` zones are FINISHed while the host writes to
+    ``concurrency`` other zones.  Interference = host-only throughput /
+    host throughput under concurrent FINISH."""
+    fill = max(1, int(round(dev.zone_pages * fill_occupancy)))
+    hpz = host_pages_per_zone or fill
+
+    # victims: partially filled zones that will be finished
+    victims = list(range(concurrency))
+    writers = list(range(concurrency, 2 * concurrency))
+    for z in victims:
+        dev.zone_write(z, fill)
+
+    host_traces: List[IOTrace] = []
+    for z in writers:
+        tr = dev.zone_write(z, hpz, trace=True)
+        host_traces.append(tr)
+
+    finish_traces: List[IOTrace] = []
+    for z in victims:
+        tr = dev.zone_finish(z, trace=True)
+        if tr is not None and len(tr.luns):
+            finish_traces.append(tr)
+
+    # baseline: host streams alone
+    base = timing.run_trace(dev.flash, host_traces)
+    base_tp = sum(base[f"owner{i}_throughput_pages_s"]
+                  for i in range(len(host_traces)))
+    # contended: host + finish dummy streams interleaved
+    cont = timing.run_trace(dev.flash, host_traces + finish_traces)
+    cont_tp = sum(cont[f"owner{i}_throughput_pages_s"]
+                  for i in range(len(host_traces)))
+    factor = base_tp / cont_tp if cont_tp else float("inf")
+    return {
+        "concurrency": float(concurrency),
+        "baseline_pages_s": base_tp,
+        "contended_pages_s": cont_tp,
+        "interference": factor,
+        "dummy_pages": float(sum(len(t.luns) for t in finish_traces)),
+    }
+
+
+# --------------------------------------------------------------------- #
+# FIO-like raw write benchmark (paper Fig. 9)
+# --------------------------------------------------------------------- #
+def write_benchmark(dev: ZNSDevice, *, request_kib: int, n_jobs: int,
+                    mib_per_job: int = 16) -> Dict[str, float]:
+    """``n_jobs`` concurrent sequential writers, one dedicated zone each,
+    fixed request size.  Reports aggregate bandwidth (MiB/s)."""
+    pages_per_req = max(1, request_kib * 1024 // dev.flash.page_bytes)
+    reqs_per_job = max(1, mib_per_job * 1024 * 1024
+                       // (pages_per_req * dev.flash.page_bytes))
+    total_pages = pages_per_req * reqs_per_job
+    total_pages = min(total_pages, dev.zone_pages)
+
+    traces: List[IOTrace] = []
+    for j in range(n_jobs):
+        tr = dev.zone_write(j, total_pages, trace=True)
+        traces.append(tr)
+    stats = timing.run_trace(dev.flash, traces)
+    return {
+        "request_kib": float(request_kib),
+        "n_jobs": float(n_jobs),
+        "pages": float(stats["n"]),
+        "bandwidth_mib_s": timing.write_bandwidth_mib_s(dev.flash, stats),
+        "makespan_s": stats["makespan_s"],
+    }
+
+
+# --------------------------------------------------------------------- #
+# Zone-allocation latency (paper Table 4)
+# --------------------------------------------------------------------- #
+def alloc_latency_benchmark(dev: ZNSDevice, *, n_allocs: int = 32
+                            ) -> Dict[str, float]:
+    """Median wall-clock latency of zone allocation.  Exercises the
+    allocate -> write -> finish -> reset cycle so re-allocation hits the
+    deferred-erase path too."""
+    n = min(n_allocs, dev.n_zones)
+    # warm up jit
+    dev.zone_write(0, 1)
+    dev.zone_finish(0)
+    dev.zone_reset(0)
+    dev.alloc_latencies_us.clear()
+    for i in range(n):
+        z = i % max(1, dev.n_zones // 2)
+        dev.zone_write(z, 1)
+        dev.zone_finish(z)
+        dev.zone_reset(z)
+    return {
+        "n_allocs": float(len(dev.alloc_latencies_us)),
+        "median_us": dev.median_alloc_latency_us(),
+        "mean_us": float(np.mean(dev.alloc_latencies_us)),
+    }

@@ -1,0 +1,119 @@
+"""Pallas TPU kernel: GQA decode attention over a long KV cache.
+
+One new token per sequence attends to a KV cache of length S (the
+decode_32k / long_500k serving shapes).  This is memory-bound: the kernel
+streams the cache HBM->VMEM exactly once in (BS, D) tiles and keeps the
+per-head streaming-softmax state (m, l, acc) in VMEM scratch.
+
+* grid = (batch, n_kv_blocks); kv dimension sequential so scratch carries.
+* K/V layout (B, S, Hkv, D) -- cache-native (append is a row write).
+* GQA without gathers: q is reshaped to (Hkv, G, D) and each kv tile
+  (BS, Hkv, D) contracts per kv-head group: scores (Hkv, G, BS) via a
+  dot_general batched over Hkv.
+* ``length`` masks the tail (cache may be partially filled).
+
+Output: (B, Hq, D).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+            *, scale: float, block_s: int):
+    si = pl.program_id(1)
+    ns = pl.num_programs(1)
+
+    @pl.when(si == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[0]
+    # skip tiles entirely beyond the filled cache
+    @pl.when(si * block_s < length)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)             # (Hkv, G, D)
+        k = k_ref[0].astype(jnp.float32)             # (BS, Hkv, D)
+        v = v_ref[0].astype(jnp.float32)             # (BS, Hkv, D)
+        hkv, g, d = q.shape
+        # scores: contract D, batch over Hkv -> (Hkv, G, BS)
+        s = jax.lax.dot_general(
+            q, k.transpose(1, 2, 0),                  # (Hkv, D, BS)
+            (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32) * scale
+        pos = si * block_s + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 2)
+        s = jnp.where(pos < length, s, NEG_INF)
+
+        m_prev = m_scr[...]                           # (Hkv, G, 1)
+        l_prev = l_scr[...]
+        m_cur = jnp.max(s, axis=2, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                        # (Hkv, G, BS)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=2, keepdims=True)
+        # acc += p @ v : (Hkv, G, BS) x (Hkv, BS, D) -> (Hkv, G, D)
+        pv = jax.lax.dot_general(
+            p, v.transpose(1, 0, 2),
+            (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)
+        acc_scr[...] = acc_scr[...] * alpha + pv
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(si == ns - 1)
+    def _finish():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def decode_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                            lengths: jax.Array, *, block_s: int = 512,
+                            interpret: bool = False) -> jax.Array:
+    """q: (B, Hq, D); k/v: (B, S, Hkv, D); lengths: (B,) valid cache len.
+
+    Returns (B, Hq, D).
+    """
+    b, hq, d = q.shape
+    _, s, hkv, dk = k.shape
+    assert dk == d and hq % hkv == 0
+    g = hq // hkv
+    bs = min(block_s, s)
+    if s % bs:
+        raise ValueError(f"cache len {s} % block {bs} != 0")
+    grid = (b, s // bs)
+    scale = 1.0 / (d ** 0.5)
+    qg = q.reshape(b, hkv, g, d)
+
+    kernel = functools.partial(_kernel, scale=scale, block_s=bs)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b_, si: (b_,)),
+            pl.BlockSpec((1, hkv, g, d), lambda b_, si: (b_, 0, 0, 0)),
+            pl.BlockSpec((1, bs, hkv, d), lambda b_, si: (b_, si, 0, 0)),
+            pl.BlockSpec((1, bs, hkv, d), lambda b_, si: (b_, si, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, hkv, g, d), lambda b_, si: (b_, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((hkv, g, 1), jnp.float32),
+            pltpu.VMEM((hkv, g, 1), jnp.float32),
+            pltpu.VMEM((hkv, g, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), qg, k, v)
+    return out.reshape(b, hq, d)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for decode attention."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         lengths: jax.Array) -> jax.Array:
+    """q: (B, Hq, D); k/v: (B, S, Hkv, D); lengths: (B,). -> (B, Hq, D)."""
+    b, hq, d = q.shape
+    _, s, hkv, _ = k.shape
+    g = hq // hkv
+    # keep the cache in its storage dtype: contract with f32 accumulation
+    # (preferred_element_type) instead of materializing an f32 copy of the
+    # whole KV cache (2x HBM) -- §Perf iteration B0
+    qg = q.reshape(b, hkv, g, d)
+    scale = 1.0 / (d ** 0.5)
+    logits = jnp.einsum("bhgd,bshd->bhgs", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    mask = jnp.arange(s)[None, :] < lengths[:, None]     # (B, S)
+    logits = jnp.where(mask[:, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, hq, d).astype(q.dtype)

@@ -1,0 +1,131 @@
+"""Pallas TPU kernel: blocked causal flash-attention forward (GQA-aware).
+
+Canonical FlashAttention-2 style streaming softmax, adapted to the TPU
+memory hierarchy:
+
+* grid = (batch, q_heads, n_q_blocks, n_kv_blocks); the innermost (kv)
+  dimension is sequential ("arbitrary") so the VMEM scratch accumulators
+  (running max m, normalizer l, and the output accumulator) persist across
+  kv steps -- HBM traffic is exactly one pass over K/V per q block.
+* BlockSpecs tile Q (BQ, D) and K/V (BK, D) with D the full head dim
+  (<= 128, one MXU lane tile); BQ/BK default to 128 to keep the two
+  matmuls MXU-shaped (128x128x128).
+* GQA: the K/V BlockSpec index_map folds the q-head -> kv-head mapping
+  (h // q_per_kv), so grouped heads reuse the same K/V tiles without a
+  gather.
+* Causality: kv blocks strictly above the diagonal are skipped via
+  @pl.when (no compute, no write); the diagonal block applies the
+  triangular mask.
+
+Numerics follow the reference: logits scaled by 1/sqrt(D), accumulation
+in f32, output cast to the input dtype.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+            *, scale: float, causal: bool, block_q: int, block_k: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # causal: skip kv blocks entirely above the diagonal
+    if causal:
+        run = ki * block_k <= qi * block_q + block_q - 1
+    else:
+        run = ki >= 0  # always true (traced)
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)           # (BQ, D)
+        k = k_ref[0, 0].astype(jnp.float32)           # (BK, D)
+        v = v_ref[0, 0].astype(jnp.float32)           # (BK, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (BQ, BK)
+        if causal:
+            rows = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, s.shape, 0)
+            cols = ki * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, s.shape, 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+
+        m_prev = m_scr[...]                           # (BQ, 1)
+        l_prev = l_scr[...]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                        # (BQ, BK)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
+        acc = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+        acc_scr[...] = acc
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)               # fully-masked rows
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret"))
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, block_q: int = 128,
+                           block_k: int = 128,
+                           interpret: bool = False) -> jax.Array:
+    """q: (B, Hq, S, D); k/v: (B, Hkv, S, D) with Hq % Hkv == 0."""
+    b, hq, s, d = q.shape
+    _, hkv, sk, dk = k.shape
+    assert dk == d and hq % hkv == 0
+    q_per_kv = hq // hkv
+    bq = min(block_q, s)
+    bk = min(block_k, sk)
+    if s % bq or sk % bk:
+        raise ValueError(f"seq {s}/{sk} not divisible by blocks {bq}/{bk}")
+    grid = (b, hq, s // bq, sk // bk)
+    scale = 1.0 / (d ** 0.5)
+
+    kernel = functools.partial(_kernel, scale=scale, causal=causal,
+                               block_q=bq, block_k=bk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h, qi, ki: (b_, h, qi, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h, qi, ki: (b_, h // q_per_kv, ki, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h, qi, ki: (b_, h // q_per_kv, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d),
+                               lambda b_, h, qi, ki: (b_, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, s, d), q.dtype),
+        # running max / normalizer / output accumulator persist in VMEM
+        # across the sequential kv grid dimension
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

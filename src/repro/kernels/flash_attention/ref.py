@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for flash attention (GQA, optional causal)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("causal",))
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True) -> jax.Array:
+    """q: (B, Hq, S, D); k/v: (B, Hkv, Sk, D); returns (B, Hq, S, D)."""
+    b, hq, s, d = q.shape
+    _, hkv, sk, _ = k.shape
+    q_per_kv = hq // hkv
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    if q_per_kv > 1:
+        kf = jnp.repeat(kf, q_per_kv, axis=1)
+        vf = jnp.repeat(vf, q_per_kv, axis=1)
+    scale = 1.0 / (d ** 0.5)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", qf, kf) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, sk), dtype=bool), k=sk - s)
+        logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vf)
+    return out.astype(q.dtype)

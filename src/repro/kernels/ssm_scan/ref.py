@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the selective scan (lax.scan over time)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssm_scan_ref(x: jax.Array, dt: jax.Array, b: jax.Array, c: jax.Array,
+                 a: jax.Array, d: jax.Array, *, chunk: int = 256
+                 ) -> jax.Array:
+    """Same contract as ssm_scan_pallas; differentiable reference.
+
+    Uses chunked-remat over time so training at long T stores O(T/chunk)
+    states instead of O(T) (see layers.chunked_remat_scan).
+    """
+    from repro.models.layers import chunked_remat_scan
+    bh, t, p = x.shape
+    n = b.shape[-1]
+    af = a.astype(jnp.float32)
+    df = d.astype(jnp.float32)
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp                   # dt_t: (BH, P)
+        x_t = x_t.astype(jnp.float32)
+        dt_t = dt_t.astype(jnp.float32)
+        b_t = b_t.astype(jnp.float32)
+        c_t = c_t.astype(jnp.float32)
+        da = jnp.exp(dt_t[..., None] * af[None])              # (BH, P, N)
+        h = h * da + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        y_t = jnp.sum(h * c_t[:, None, :], axis=-1) + df[None] * x_t
+        return h, y_t
+
+    h0 = jnp.zeros((bh, p, n), jnp.float32)
+    xs = (x.transpose(1, 0, 2), dt.transpose(1, 0, 2),
+          b.transpose(1, 0, 2), c.transpose(1, 0, 2))
+    _, ys = chunked_remat_scan(step, h0, xs, chunk)
+    return ys.transpose(1, 0, 2).astype(x.dtype)

@@ -1,0 +1,43 @@
+"""Jit'd public entry point for the zns_alloc kernel.
+
+Selects the Pallas kernel on TPU, interpret-mode Pallas on CPU (used by
+tests and by ``ZNSDevice(alloc_impl='pallas')``), with the jnp reference
+always available via ``impl='ref'``.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.zns_alloc.ref import zns_alloc_ref
+from repro.kernels.zns_alloc.zns_alloc import zns_alloc_pallas
+
+
+def _pick_group_block(n_groups: int) -> int:
+    for gb in (8, 4, 2, 1):
+        if n_groups % gb == 0:
+            return gb
+    return 1
+
+
+def zns_alloc(wear2d: jax.Array, avail2d: jax.Array, eligible: jax.Array,
+              *, take: int, impl: str = "pallas"
+              ) -> Tuple[jax.Array, jax.Array]:
+    """Returns (sel bool mask (n_groups, per_group), feasible bool scalar).
+
+    Feasibility = every eligible group has >= take allocatable elements.
+    """
+    if impl == "ref":
+        sel, ok = zns_alloc_ref(wear2d, avail2d, eligible, take=take)
+    else:
+        interpret = jax.default_backend() != "tpu"
+        sel, ok = zns_alloc_pallas(
+            wear2d, avail2d, eligible, take=take,
+            group_block=_pick_group_block(wear2d.shape[0]),
+            interpret=interpret)
+    elig = eligible.astype(bool)
+    feasible = jnp.all(jnp.where(elig, ok >= take, True))
+    return sel.astype(bool), feasible

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the zns_alloc kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+BIG = 2**30
+
+
+@functools.partial(jax.jit, static_argnames=("take",))
+def zns_alloc_ref(wear2d: jax.Array, avail2d: jax.Array,
+                  eligible: jax.Array, *, take: int
+                  ) -> tuple[jax.Array, jax.Array]:
+    """Rank-based per-row lowest-wear selection (stable ties by index)."""
+    wear2d = wear2d.astype(jnp.int32)
+    avail2d = avail2d.astype(jnp.int32)
+    allocatable = ((avail2d == 0) | (avail2d == 3))
+    allocatable &= (eligible.astype(jnp.int32) != 0)[:, None]
+    ok = jnp.sum(allocatable.astype(jnp.int32), axis=1)
+    keyed = jnp.where(allocatable, wear2d, BIG)
+    order = jnp.argsort(keyed, axis=1, stable=True)
+    ranks = jnp.argsort(order, axis=1, stable=True)
+    sel = (ranks < take) & allocatable
+    return sel.astype(jnp.int32), ok

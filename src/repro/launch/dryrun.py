@@ -1,0 +1,250 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds the production mesh, the step function for the
+cell kind (train / prefill / decode), lowers it against ShapeDtypeStruct
+inputs with full sharding annotations (never allocating the model), and
+compiles.  Success proves the distribution config is coherent; the
+compiled artifact yields the roofline terms (§Roofline).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch granite-3-8b \
+        --shape train_4k --mesh single --out results/dryrun
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import flops as FL
+from repro.analysis import hlo as hlo_mod
+from repro.analysis import roofline as roof
+from repro.configs import applicable_cells, get_arch, get_shape
+from repro.launch import sharding as SH
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as MDL
+from repro.train import optimizer as OPT
+
+
+def pick_n_micro(cfg, cell, mesh) -> int:
+    """Gradient-accumulation microbatches: keep per-micro local batch >= 1
+    while targeting <= ~8k local tokens per microbatch for big models."""
+    if cell.kind != "train":
+        return 1
+    dp = 1
+    for ax in SH.fit_batch_axes(mesh, cell.global_batch,
+                                SH.batch_includes_model(cfg)):
+        dp *= mesh.shape[ax]
+    local_b = max(1, cell.global_batch // dp)
+    # activation-footprint target: ~4k local tokens per microbatch for
+    # dense archs; ~8k for FSDP/MoE archs (every extra microbatch re-
+    # gathers the FSDP'd weights -- §Perf A6)
+    tgt = 8192 if SH._needs_fsdp(cfg) else 4096
+    want = -(-local_b * cell.seq_len // tgt)
+    return max(1, min(local_b, want))
+
+
+def build_lowerable(cfg, cell, mesh, *, attn_impl="chunked",
+                    ssm_impl="ref", n_micro=None):
+    """Returns (jitted_fn, arg_specs) ready to .lower(*arg_specs)."""
+    specs = MDL.input_specs(cfg, cell)
+    pspecs = MDL.param_specs(cfg)
+    p_shard = SH.param_shardings(cfg, mesh, pspecs)
+
+    if cell.kind == "train":
+        ospecs = MDL.opt_state_specs(cfg)
+        o_shard = SH.opt_state_shardings(cfg, mesh, ospecs)
+        nm = n_micro or pick_n_micro(cfg, cell, mesh)
+        # pre-shape the batch (n_micro, B_micro, ...) with explicit
+        # sharding so GSPMD never guesses through the micro reshape
+        bspec = specs["batch"]
+        if nm > 1:
+            bspec = jax.tree.map(
+                lambda s_: jax.ShapeDtypeStruct(
+                    (nm, s_.shape[0] // nm) + s_.shape[1:], s_.dtype),
+                bspec)
+        b_shard = SH.batch_shardings(mesh, bspec, cell.global_batch // nm,
+                                     SH.batch_includes_model(cfg),
+                                     micro_leading=(nm > 1))
+        opt_cfg = OPT.AdamWConfig()
+        train_attn = "qchunk" if attn_impl == "chunked" else attn_impl
+        step = MDL.make_train_step(
+            cfg, opt_cfg, attn_impl=train_attn, ssm_impl=ssm_impl,
+            n_micro=nm, remat=True)
+        fn = jax.jit(step,
+                     in_shardings=(p_shard, o_shard, b_shard),
+                     out_shardings=(p_shard, o_shard, None),
+                     donate_argnums=(0, 1))
+        return fn, (pspecs, ospecs, bspec)
+
+    if cell.kind == "prefill":
+        c_shard = SH.cache_shardings(cfg, mesh, specs["caches"],
+                                     cell.global_batch)
+        t_shard = SH.batch_shardings(mesh, specs["tokens"],
+                                     cell.global_batch,
+                                     SH.batch_includes_model(cfg))
+        step = MDL.make_prefill_step(cfg, attn_impl=attn_impl,
+                                     ssm_impl=ssm_impl)
+        args = [pspecs, specs["tokens"], specs["caches"]]
+        shards = [p_shard, t_shard, c_shard]
+        if "memory" in specs:
+            m_shard = SH.batch_shardings(mesh, specs["memory"],
+                                         cell.global_batch)
+            args.append(specs["memory"])
+            shards.append(m_shard)
+        fn = jax.jit(step, in_shardings=tuple(shards),
+                     out_shardings=(None, None), donate_argnums=(2,))
+        return fn, tuple(args)
+
+    if cell.kind == "decode":
+        c_shard = SH.cache_shardings(cfg, mesh, specs["caches"],
+                                     cell.global_batch)
+        t_shard = SH.batch_shardings(mesh, specs["token"],
+                                     cell.global_batch)
+        pos_shard = SH.batch_shardings(mesh, specs["pos"],
+                                       cell.global_batch)
+        # decode always uses the einsum path (see make_decode_step);
+        # 'chunked' would force SPMD re-materialization of the cache scan
+        decode_impl = "xla" if attn_impl == "chunked" else attn_impl
+        step = MDL.make_decode_step(cfg, attn_impl=decode_impl)
+        fn = jax.jit(step,
+                     in_shardings=(p_shard, t_shard, c_shard, pos_shard),
+                     out_shardings=(None, c_shard),
+                     donate_argnums=(2,))
+        return fn, (pspecs, specs["token"], specs["caches"], specs["pos"])
+
+    raise ValueError(cell.kind)
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, *,
+             attn_impl="chunked", ssm_impl="ref") -> dict:
+    cfg = get_arch(arch)
+    cell = get_shape(shape)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    result = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+              "devices": int(len(jax.devices())),
+              "mesh_shape": dict(mesh.shape),
+              "attn_impl": attn_impl, "ssm_impl": ssm_impl}
+    t0 = time.time()
+    fn, args = build_lowerable(cfg, cell, mesh, attn_impl=attn_impl,
+                               ssm_impl=ssm_impl)
+    with mesh:
+        lowered = fn.lower(*args)
+        result["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        result["compile_s"] = round(time.time() - t1, 1)
+
+    mem = compiled.memory_analysis()
+    result["memory"] = {
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+        "output_bytes": getattr(mem, "output_size_in_bytes", None),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+        "peak_bytes": (getattr(mem, "temp_size_in_bytes", 0) or 0)
+        + (getattr(mem, "argument_size_in_bytes", 0) or 0),
+    }
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+    result["cost"] = {"flops": flops, "bytes_accessed": bytes_accessed}
+
+    text = compiled.as_text()
+    result["collectives"] = hlo_mod.collective_bytes(text)
+    result["collective_counts"] = hlo_mod.collective_count(text)
+
+    # roofline terms: analytic (primary -- XLA cost_analysis counts scan
+    # bodies once; see analysis/flops.py) + raw HLO kept for reference
+    n_dev = result["devices"]
+    dp = 1
+    for ax in SH.fit_batch_axes(mesh, cell.global_batch,
+                                SH.batch_includes_model(cfg)):
+        dp *= mesh.shape[ax]
+    dp = max(1, dp)
+    tp = mesh.shape["model"] if not SH.batch_includes_model(cfg) else 1
+    if "pod" in mesh.axis_names and cell.kind == "train":
+        pass  # dp already includes pod via fit_batch_axes
+    n_micro = pick_n_micro(cfg, cell, mesh)
+    cost_a = FL.cell_cost(cfg, cell, n_dev, dp=dp, tp=tp,
+                          n_micro=n_micro,
+                          fsdp=SH._needs_fsdp(cfg),
+                          append_impl="scatter",
+                          param_dp=mesh.shape["data"])
+    rl = roof.Roofline(flops=cost_a.flops, hbm_bytes=cost_a.hbm_bytes,
+                       coll_bytes=max(cost_a.coll_bytes,
+                                      result["collectives"].get("total", 0)),
+                       model_flops=cost_a.model_flops)
+    result["roofline"] = rl.report()
+    result["roofline"]["residency_gb"] = round(
+        cost_a.detail["residency_bytes"] / 1e9, 2)
+    result["roofline"]["n_micro"] = n_micro
+    result["roofline"]["dp"] = dp
+    result["roofline"]["tp"] = tp
+    result["analytic_detail"] = cost_a.detail
+    result["ok"] = True
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None)
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--attn-impl", default="chunked")
+    ap.add_argument("--ssm-impl", default="ref")
+    ap.add_argument("--out", type=str, default="results/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        cells = list(applicable_cells())
+    else:
+        cells = [(args.arch, args.shape)]
+
+    failures = 0
+    for arch, shape in cells:
+        for mesh_kind in meshes:
+            name = f"{arch}__{shape}__{mesh_kind}.json"
+            path = outdir / name
+            if args.skip_existing and path.exists():
+                prev = json.loads(path.read_text())
+                if prev.get("ok"):
+                    print(f"[skip] {name}")
+                    continue
+            t0 = time.time()
+            try:
+                res = run_cell(arch, shape, mesh_kind,
+                               attn_impl=args.attn_impl,
+                               ssm_impl=args.ssm_impl)
+                rl = res["roofline"]
+                print(f"[ok] {arch} {shape} {mesh_kind}: "
+                      f"compile={res['compile_s']}s "
+                      f"bottleneck={rl['bottleneck']} "
+                      f"t={max(rl['t_compute_s'], rl['t_memory_s'], rl['t_collective_s']):.4f}s "
+                      f"({time.time()-t0:.0f}s)")
+            except Exception as e:  # noqa: BLE001 -- record and continue
+                res = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                       "ok": False, "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-4000:]}
+                failures += 1
+                print(f"[FAIL] {arch} {shape} {mesh_kind}: {e}")
+            path.write_text(json.dumps(res, indent=1, default=str))
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,269 @@
+"""Per-architecture sharding rules (DP x TP x EP x SP on the production
+mesh).
+
+Rules are path-based over the parameter/cache pytrees; specs are written
+for the *base* (unstacked) layer shapes and left-padded with ``None`` for
+the scan-stacked leading rep dimension.
+
+Key decisions (rationale in DESIGN.md §5):
+
+* params: column-sharded in-projections / row-sharded out-projections
+  (Megatron TP); expert dimension over ``model`` (EP); embeddings sharded
+  on vocab; norms + small vectors replicated; xLSTM blocks replicated
+  (125M params -- DP-only arch).
+* KV caches: heads over ``model`` when ``n_kv_heads %% |model| == 0``,
+  otherwise *sequence-sharded* (SP) -- the masked append keeps SP free of
+  collectives; attention pays one tiny distributed-softmax all-reduce.
+* MLA latent cache: sequence-sharded (latent dim stays whole so the
+  absorbed-decode contractions stay local per shard).
+* batch dims over ``('pod', 'data')``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+
+def _dp(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def fit_batch_axes(mesh: Mesh, batch: int,
+                   include_model: bool = False) -> tuple:
+    """Largest prefix of the DP axes (optionally + model) whose product
+    divides ``batch`` -- small serving batches (or batch=1 long-context
+    decode) simply use fewer DP axes."""
+    axes = []
+    prod = 1
+    candidates = _dp(mesh) + (("model",) if include_model else ())
+    for ax in candidates:
+        if batch % (prod * mesh.shape[ax]) == 0:
+            axes.append(ax)
+            prod *= mesh.shape[ax]
+        else:
+            break
+    return tuple(axes)
+
+
+def _model_size(mesh: Mesh) -> int:
+    return mesh.shape["model"]
+
+
+def _path_str(path) -> str:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        else:
+            out.append(str(p))
+    return "/".join(out)
+
+
+def _pad(spec: P, ndim: int) -> P:
+    """Left-pad a spec with None up to ndim (scan-stacked leading dims)."""
+    missing = ndim - len(spec)
+    if missing < 0:
+        raise ValueError(f"spec {spec} longer than ndim {ndim}")
+    return P(*([None] * missing + list(spec)))
+
+
+# --------------------------------------------------------------------- #
+# parameters
+# --------------------------------------------------------------------- #
+def _is_stacked(path: str) -> bool:
+    """Scan-stacked pytrees (slots / encoder / memory_kv) carry a leading
+    repetition dim; 'first'-layer and top-level leaves do not."""
+    return ("slots/" in path or path.startswith("slots")
+            or "encoder" in path or "memory_kv" in path)
+
+
+def _param_spec(path: str, ndim: int, cfg: ArchConfig, mesh: Mesh) -> P:
+    m = "model"
+    base = ndim - (1 if _is_stacked(path) else 0)
+    # xLSTM mixers: tiny -- replicate (DP-only)
+    if "mlstm" in path or "slstm" in path:
+        return _pad(P(), ndim)
+    if "embed" in path:
+        return _pad(P(m, None), ndim)
+    # norms / scalars / biases
+    if base <= 1 or "norm" in path:
+        return _pad(P(), ndim)
+    if "router" in path:
+        return _pad(P(), ndim)
+    # MoE expert stacks: base ndim 3 (E, d_in, d_out).
+    # §Perf A1 (EP=DP) + A1b (EPxTP 2D): experts shard E over *data*
+    # (dispatch = token all-to-all; expert grads local; no weight
+    # gathers) and the ff dim over *model* (Megatron-MoE TP) so the
+    # 398B-scale expert stacks split 256-ways for storage.
+    if base == 3 and any(k in path for k in ("w_gate", "w_up")):
+        return _pad(P("data", None, m), ndim)
+    if base == 3 and "w_down" in path:
+        return _pad(P("data", m, None), ndim)
+    # MLA
+    if any(k in path for k in ("w_dq", "w_dkv", "w_krope")):
+        return _pad(P(None, None), ndim)
+    if any(k in path for k in ("w_uq", "w_uk", "w_uv")):
+        return _pad(P(None, m), ndim)
+    # attention projections
+    if any(k in path for k in ("wq", "wk", "wv")):
+        hkv = cfg.n_kv_heads * cfg.resolved_head_dim
+        if ("wk" in path or "wv" in path) and hkv % _model_size(mesh):
+            return _pad(P(None, None), ndim)  # kv too narrow to shard
+        return _pad(P(None, m), ndim)
+    if "wo" in path:
+        return _pad(P(m, None), ndim)
+    # dense FFN (base ndim 2)
+    if any(k in path for k in ("w_in", "w_gate", "w_up", "in_proj",
+                                "dt_proj", "conv_w")):
+        return _pad(P(None, m), ndim)
+    if any(k in path for k in ("w_out", "w_down", "x_proj", "out_proj",
+                                "a_log")):
+        return _pad(P(m, None), ndim)
+    if path.endswith("up") or "/up" in path:
+        return _pad(P(None, m), ndim)
+    if path.endswith("down") or "/down" in path:
+        return _pad(P(m, None), ndim)
+    return _pad(P(), ndim)
+
+
+FSDP_PARAM_THRESHOLD = 20e9  # params above this also shard over 'data'
+
+
+def _needs_fsdp(cfg: ArchConfig) -> bool:
+    from repro.models.model import param_count
+    return param_count(cfg) > FSDP_PARAM_THRESHOLD
+
+
+def _uses_data(spec: P) -> bool:
+    for ax in spec:
+        if ax == "data" or (isinstance(ax, tuple) and "data" in ax):
+            return True
+    return False
+
+
+def _add_fsdp(spec: P, shape, mesh: Mesh) -> P:
+    """ZeRO-3/FSDP: also shard big weights over 'data' for storage --
+    SPMD all-gathers them at use.  Picks the first un-sharded dim whose
+    size divides |data|."""
+    data = mesh.shape["data"]
+    dims = list(spec) + [None] * (len(shape) - len(spec))
+    for i, (d, sz) in enumerate(zip(dims, shape)):
+        if d is None and sz % data == 0 and sz >= data:
+            dims[i] = "data"
+            return P(*dims)
+    return spec
+
+
+def param_shardings(cfg: ArchConfig, mesh: Mesh, specs: Any) -> Any:
+    fsdp = _needs_fsdp(cfg)
+
+    def assign(path, leaf):
+        ps = _path_str(path)
+        spec = _param_spec(ps, len(leaf.shape), cfg, mesh)
+        if fsdp and leaf.ndim >= 2 and "norm" not in ps \
+                and not _uses_data(spec):  # EP-sharded weights stay put
+            spec = _add_fsdp(spec, leaf.shape, mesh)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(assign, specs)
+
+
+def opt_state_shardings(cfg: ArchConfig, mesh: Mesh, specs: Any) -> Any:
+    """Optimizer state mirrors parameter sharding (mu/nu); step scalar
+    replicated."""
+    fsdp = _needs_fsdp(cfg)
+
+    def assign(path, leaf):
+        ps = _path_str(path)
+        if leaf.ndim == 0 or ps.endswith("step") or "/step" in ps:
+            return NamedSharding(mesh, P())
+        spec = _param_spec(ps, len(leaf.shape), cfg, mesh)
+        if fsdp and leaf.ndim >= 2 and "norm" not in ps \
+                and not _uses_data(spec):  # EP-sharded weights stay put
+            spec = _add_fsdp(spec, leaf.shape, mesh)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(assign, specs)
+
+
+# --------------------------------------------------------------------- #
+# inputs / caches
+# --------------------------------------------------------------------- #
+def _fit(spec: P, ndim: int, stacked: bool) -> P:
+    """Right-pad a *base* (batch-leading) spec with None to the base rank,
+    then left-pad for the scan-stacking rep dim."""
+    base = ndim - (1 if stacked else 0)
+    body = list(spec) + [None] * (base - len(spec))
+    if len(body) > base:
+        raise ValueError(f"spec {spec} longer than base rank {base}")
+    return P(*([None] if stacked else []), *body)
+
+
+def _cache_spec(path: str, ndim: int, cfg: ArchConfig, mesh: Mesh,
+                dp: tuple) -> P:
+    m = "model"
+    head_shard = cfg.n_kv_heads % _model_size(mesh) == 0
+    stacked = "slots" in path or "memory_kv" in path
+    if "mlstm" in path or "slstm" in path:
+        return _fit(P(dp), ndim, stacked)         # batch-only
+    if "memory_kv" in path:
+        # (B, M, Hkv, D): heads if divisible else replicated M
+        spec = P(dp, None, m, None) if head_shard else P(dp)
+        return _fit(spec, ndim, stacked)
+    if "c_kv" in path or "k_rope" in path:
+        # MLA latent cache (B, S, L): sequence-sharded
+        return _fit(P(dp, m, None), ndim, stacked)
+    if path.endswith("/k") or path.endswith("/v") or "/kv/" in path:
+        # (B, S, Hkv, D)
+        spec = (P(dp, None, m, None) if head_shard
+                else P(dp, m, None, None))
+        return _fit(spec, ndim, stacked)
+    if "conv" in path:
+        return _fit(P(dp, None, m), ndim, stacked)  # (B, K-1, d_inner)
+    if "ssm" in path:
+        return _fit(P(dp, m, None), ndim, stacked)  # (B, d_inner, N)
+    return _fit(P(dp), ndim, stacked)
+
+
+def cache_shardings(cfg: ArchConfig, mesh: Mesh, specs: Any,
+                    batch: int) -> Any:
+    dp = fit_batch_axes(mesh, batch)
+
+    def assign(path, leaf):
+        return NamedSharding(
+            mesh, _cache_spec(_path_str(path), len(leaf.shape), cfg, mesh,
+                              dp))
+    return jax.tree_util.tree_map_with_path(assign, specs)
+
+
+def batch_shardings(mesh: Mesh, specs: Any, batch: int,
+                    include_model: bool = False,
+                    micro_leading: bool = False) -> Any:
+    """Batch-dim sharding over as many DP axes as divide ``batch``;
+    ``include_model`` folds the (otherwise idle) model axis into DP
+    (xLSTM); ``micro_leading`` marks batches pre-shaped
+    (n_micro, B_micro, ...) -- the microbatch dim stays unsharded so
+    GSPMD never has to guess through the reshape."""
+    dp = fit_batch_axes(mesh, batch, include_model)
+
+    def assign(path, leaf):
+        if not dp:
+            return NamedSharding(mesh, P())
+        lead = [None] if micro_leading else []
+        spec = P(*lead, dp,
+                 *([None] * (len(leaf.shape) - 1 - len(lead))))
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(assign, specs)
+
+
+def batch_includes_model(cfg: ArchConfig) -> bool:
+    return cfg.family == "ssm"  # xlstm: params replicated, model axis idle
+
+
+def scalar_sharding(mesh: Mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,1 @@
+"""Model substrate: every assigned architecture, pure JAX."""

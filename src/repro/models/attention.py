@@ -1,0 +1,188 @@
+"""GQA self-attention + cross-attention blocks with KV-cache serving.
+
+Implementation notes (TPU posture):
+
+* Full-sequence attention uses the flash-style impl switch from
+  ``repro.kernels.flash_attention.ops`` -- ``chunked`` (jnp streaming
+  softmax, compiles on every backend, O(S*BK) memory) by default,
+  ``pallas`` on TPU.
+* Decode uses ``repro.kernels.decode_attention.ops`` over the KV cache.
+* KV cache layout: (B, S, Hkv, D), appended with a *masked* update
+  (``where(iota == pos, new, cache)``): this keeps every dimension
+  shardable (in particular S over the model axis for kv_heads < |model|)
+  with zero collectives -- see DESIGN.md §5 and the §Perf log for the
+  shard_map DUS variant.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.flash_attention.ops import attention as flash_attention
+from repro.models import layers as L
+
+
+def attn_init(rng, d_model: int, n_heads: int, n_kv_heads: int,
+              head_dim: int, dtype=jnp.bfloat16) -> Dict:
+    r = jax.random.split(rng, 4)
+    return {
+        "wq": L.dense_init(r[0], d_model, n_heads * head_dim, dtype),
+        "wk": L.dense_init(r[1], d_model, n_kv_heads * head_dim, dtype),
+        "wv": L.dense_init(r[2], d_model, n_kv_heads * head_dim, dtype),
+        "wo": L.dense_init(r[3], n_heads * head_dim, d_model, dtype),
+    }
+
+
+def init_kv_cache(batch: int, max_seq: int, n_kv_heads: int, head_dim: int,
+                  dtype=jnp.bfloat16) -> Dict:
+    return {
+        "k": jnp.zeros((batch, max_seq, n_kv_heads, head_dim), dtype),
+        "v": jnp.zeros((batch, max_seq, n_kv_heads, head_dim), dtype),
+    }
+
+
+def cache_append(cache: Dict, k_new: jax.Array, v_new: jax.Array,
+                 pos: jax.Array, *, impl: str = "scatter") -> Dict:
+    """Single-position append. k_new/v_new: (B, Hkv, D); pos: (B,).
+
+    'scatter' (§Perf iteration B1): one-row-per-batch scatter -- with
+    buffer donation the cache is updated in place, so append traffic is
+    O(B * Hkv * D) instead of the masked variant's full read+write of the
+    cache (3x -> ~1x total decode cache bytes).  'masked' kept for A/B.
+    """
+    if impl == "masked":
+        s = cache["k"].shape[1]
+        slot = (jnp.arange(s)[None, :, None, None]
+                == pos[:, None, None, None])
+        return {
+            "k": jnp.where(slot, k_new[:, None].astype(cache["k"].dtype),
+                           cache["k"]),
+            "v": jnp.where(slot, v_new[:, None].astype(cache["v"].dtype),
+                           cache["v"]),
+        }
+    b = pos.shape[0]
+    rows = jnp.arange(b)
+    return {
+        "k": cache["k"].at[rows, pos].set(
+            k_new.astype(cache["k"].dtype), mode="drop"),
+        "v": cache["v"].at[rows, pos].set(
+            v_new.astype(cache["v"].dtype), mode="drop"),
+    }
+
+
+def attn_forward(p: Dict, x: jax.Array, *, n_heads: int, n_kv_heads: int,
+                 head_dim: int, rope_theta: float, causal: bool = True,
+                 positions: Optional[jax.Array] = None,
+                 impl: str = "chunked", use_rope: bool = True) -> jax.Array:
+    """Full-sequence self-attention. x: (B, S, d)."""
+    b, s, _ = x.shape
+    q = (x @ p["wq"]).reshape(b, s, n_heads, head_dim)
+    k = (x @ p["wk"]).reshape(b, s, n_kv_heads, head_dim)
+    v = (x @ p["wv"]).reshape(b, s, n_kv_heads, head_dim)
+    if use_rope:
+        pos = positions if positions is not None else jnp.arange(s)
+        q = L.apply_rope(q.transpose(0, 2, 1, 3), pos, rope_theta)
+        k = L.apply_rope(k.transpose(0, 2, 1, 3), pos, rope_theta)
+    else:
+        q = q.transpose(0, 2, 1, 3)
+        k = k.transpose(0, 2, 1, 3)
+    v = v.transpose(0, 2, 1, 3)
+    o = flash_attention(q, k, v, causal=causal, impl=impl)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, n_heads * head_dim)
+    return o @ p["wo"]
+
+
+def attn_prefill(p: Dict, x: jax.Array, cache: Dict, *, n_heads: int,
+                 n_kv_heads: int, head_dim: int, rope_theta: float,
+                 impl: str = "chunked") -> Tuple[jax.Array, Dict]:
+    """Prefill: full causal attention AND populate the cache."""
+    b, s, _ = x.shape
+    q = (x @ p["wq"]).reshape(b, s, n_heads, head_dim)
+    k = (x @ p["wk"]).reshape(b, s, n_kv_heads, head_dim)
+    v = (x @ p["wv"]).reshape(b, s, n_kv_heads, head_dim)
+    pos = jnp.arange(s)
+    qr = L.apply_rope(q.transpose(0, 2, 1, 3), pos, rope_theta)
+    kr = L.apply_rope(k.transpose(0, 2, 1, 3), pos, rope_theta)
+    vt = v.transpose(0, 2, 1, 3)
+    o = flash_attention(qr, kr, vt, causal=True, impl=impl)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, n_heads * head_dim)
+    new_cache = {
+        "k": jax.lax.dynamic_update_slice(
+            cache["k"], kr.transpose(0, 2, 1, 3).astype(cache["k"].dtype),
+            (0, 0, 0, 0)),
+        "v": jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0)),
+    }
+    return o @ p["wo"], new_cache
+
+
+def attn_decode(p: Dict, x: jax.Array, cache: Dict, pos: jax.Array, *,
+                n_heads: int, n_kv_heads: int, head_dim: int,
+                rope_theta: float, impl: str = "chunked"
+                ) -> Tuple[jax.Array, Dict]:
+    """One-token decode. x: (B, d); pos: (B,) current lengths."""
+    b, _ = x.shape
+    q = (x @ p["wq"]).reshape(b, n_heads, head_dim)
+    k = (x @ p["wk"]).reshape(b, n_kv_heads, head_dim)
+    v = (x @ p["wv"]).reshape(b, n_kv_heads, head_dim)
+    # rope at the current position (per batch row; explicit head axis)
+    pos_b = pos[:, None, None]                       # (B, 1, 1)
+    q = L.apply_rope(q[:, :, None, :], pos_b, rope_theta)[:, :, 0]
+    k = L.apply_rope(k[:, :, None, :], pos_b, rope_theta)[:, :, 0]
+    cache = cache_append(cache, k, v, pos)
+    o = decode_attention(q, cache["k"], cache["v"], pos + 1, impl=impl)
+    return o.reshape(b, n_heads * head_dim) @ p["wo"], cache
+
+
+# --------------------------------------------------------------------- #
+# cross-attention (VLM image layers, enc-dec decoder)
+# --------------------------------------------------------------------- #
+def cross_init(rng, d_model: int, n_heads: int, n_kv_heads: int,
+               head_dim: int, dtype=jnp.bfloat16) -> Dict:
+    return attn_init(rng, d_model, n_heads, n_kv_heads, head_dim, dtype)
+
+
+def cross_forward(p: Dict, x: jax.Array, memory: jax.Array, *,
+                  n_heads: int, n_kv_heads: int, head_dim: int,
+                  impl: str = "chunked") -> jax.Array:
+    """x: (B, S, d) queries; memory: (B, M, d). No rope, not causal."""
+    b, s, _ = x.shape
+    m = memory.shape[1]
+    q = (x @ p["wq"]).reshape(b, s, n_heads, head_dim).transpose(0, 2, 1, 3)
+    k = (memory @ p["wk"]).reshape(b, m, n_kv_heads, head_dim
+                                   ).transpose(0, 2, 1, 3)
+    v = (memory @ p["wv"]).reshape(b, m, n_kv_heads, head_dim
+                                   ).transpose(0, 2, 1, 3)
+    o = flash_attention(q, k, v, causal=False, impl=impl)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, n_heads * head_dim)
+    return o @ p["wo"]
+
+
+def cross_decode(p: Dict, x: jax.Array, memory_kv: Dict, *, n_heads: int,
+                 n_kv_heads: int, head_dim: int,
+                 impl: str = "chunked") -> jax.Array:
+    """Decode-time cross-attention against precomputed memory K/V.
+
+    x: (B, d); memory_kv: {'k','v': (B, M, Hkv, D)}.
+    """
+    b, _ = x.shape
+    q = (x @ p["wq"]).reshape(b, n_heads, head_dim)
+    m = memory_kv["k"].shape[1]
+    lengths = jnp.full((b,), m, jnp.int32)
+    o = decode_attention(q, memory_kv["k"], memory_kv["v"], lengths,
+                         impl=impl)
+    return o.reshape(b, n_heads * head_dim) @ p["wo"]
+
+
+def memory_kv(p: Dict, memory: jax.Array, *, n_kv_heads: int,
+              head_dim: int) -> Dict:
+    """Precompute cross-attention K/V once per request (prefill)."""
+    b, m, _ = memory.shape
+    return {
+        "k": (memory @ p["wk"]).reshape(b, m, n_kv_heads, head_dim),
+        "v": (memory @ p["wv"]).reshape(b, m, n_kv_heads, head_dim),
+    }

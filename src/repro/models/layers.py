@@ -1,0 +1,143 @@
+"""Shared layers: norms, RoPE, MLPs, embeddings (pure JAX, bf16-friendly).
+
+Parameter conventions: params are nested dicts of jnp arrays; every layer
+exposes ``init(rng, ...) -> params`` and a pure apply function.  Compute
+dtype follows the input; normalization statistics and softmax run in f32.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _split(rng, n):
+    return jax.random.split(rng, n)
+
+
+def dense_init(rng, d_in: int, d_out: int, dtype=jnp.bfloat16,
+               scale: float | None = None) -> jax.Array:
+    scale = scale if scale is not None else (1.0 / jnp.sqrt(d_in))
+    return (jax.random.normal(rng, (d_in, d_out), jnp.float32)
+            * scale).astype(dtype)
+
+
+def rmsnorm_init(d: int, dtype=jnp.bfloat16) -> jax.Array:
+    return jnp.ones((d,), dtype)
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def layernorm_init(d: int, dtype=jnp.bfloat16):
+    return {"w": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+def layernorm(x: jax.Array, p, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * p["w"] + p["b"]
+
+
+# --------------------------------------------------------------------- #
+# rotary position embeddings
+# --------------------------------------------------------------------- #
+def rope_frequencies(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float = 10000.0) -> jax.Array:
+    """x: (..., S, D) with positions (..., S) or (S,)."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                   # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------- #
+# MLPs
+# --------------------------------------------------------------------- #
+def swiglu_init(rng, d: int, d_ff: int, dtype=jnp.bfloat16):
+    r1, r2, r3 = _split(rng, 3)
+    return {"w_gate": dense_init(r1, d, d_ff, dtype),
+            "w_up": dense_init(r2, d, d_ff, dtype),
+            "w_down": dense_init(r3, d_ff, d, dtype)}
+
+def swiglu(x: jax.Array, p) -> jax.Array:
+    h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    return h @ p["w_down"]
+
+
+def gelu_mlp_init(rng, d: int, d_ff: int, dtype=jnp.bfloat16):
+    r1, r2 = _split(rng, 2)
+    return {"w_in": dense_init(r1, d, d_ff, dtype),
+            "w_out": dense_init(r2, d_ff, d, dtype)}
+
+
+def gelu_mlp(x: jax.Array, p) -> jax.Array:
+    return jax.nn.gelu(x @ p["w_in"]) @ p["w_out"]
+
+
+# --------------------------------------------------------------------- #
+# embeddings / unembedding
+# --------------------------------------------------------------------- #
+def embedding_init(rng, vocab: int, d: int, dtype=jnp.bfloat16):
+    return (jax.random.normal(rng, (vocab, d), jnp.float32) * 0.02
+            ).astype(dtype)
+
+
+def embed(tokens: jax.Array, table: jax.Array) -> jax.Array:
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(x: jax.Array, table: jax.Array) -> jax.Array:
+    """Tied unembedding: logits = x @ table.T (f32 accumulate)."""
+    return jax.lax.dot_general(
+        x, table, (((x.ndim - 1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def chunked_remat_scan(step, carry, xs, chunk: int):
+    """lax.scan with sqrt-style activation checkpointing over time.
+
+    Reverse-mode through a T-step scan stores the carry at every step --
+    catastrophic for recurrent states (mLSTM's (H,P,P) matrix memory at
+    500k tokens).  Chunking the scan and rematerializing inside each chunk
+    stores carries only at the T/chunk boundaries: memory drops from
+    O(T * state) to O((T/chunk + chunk) * state) for a 2x recompute cost
+    in backward -- the standard linear-RNN training recipe.
+    """
+    t = jax.tree.leaves(xs)[0].shape[0]
+    if chunk <= 1 or t % chunk or t <= chunk:
+        return jax.lax.scan(step, carry, xs)
+    n = t // chunk
+    xs_c = jax.tree.map(lambda a: a.reshape(n, chunk, *a.shape[1:]), xs)
+
+    @jax.checkpoint
+    def body(c, xc):
+        return jax.lax.scan(step, c, xc)
+
+    carry, ys = jax.lax.scan(body, carry, xs_c)
+    ys = jax.tree.map(lambda a: a.reshape(t, *a.shape[2:]), ys)
+    return carry, ys
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """logits (..., V) f32; labels (...). Mean NLL."""
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None],
+                               axis=-1).squeeze(-1)
+    return jnp.mean(logz - gold)

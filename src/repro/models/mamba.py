@@ -1,0 +1,104 @@
+"""Mamba-1 (S6) selective-SSM block -- Jamba's sequence mixer.
+
+Block: in_proj -> (x, z); causal depthwise conv + SiLU on x; data-dependent
+(dt, B, C) projections; diagonal selective scan (the ``ssm_scan`` kernel /
+its jnp reference); gate by SiLU(z); out_proj.
+
+Serving state per layer: conv tail (B, K-1, d_inner) + SSM state
+(B, d_inner, N) -- O(1) per token, which is what makes the long_500k cell
+tractable (DESIGN.md §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssm_scan.ops import ssm_scan, single_step
+from repro.models import layers as L
+
+
+def mamba_init(rng, d_model: int, *, expand: int = 2, state: int = 16,
+               conv: int = 4, dtype=jnp.bfloat16) -> Dict:
+    d_inner = expand * d_model
+    dt_rank = max(1, math.ceil(d_model / 16))
+    r = jax.random.split(rng, 6)
+    a = jnp.tile(jnp.arange(1, state + 1, dtype=jnp.float32)[None],
+                 (d_inner, 1))
+    return {
+        "in_proj": L.dense_init(r[0], d_model, 2 * d_inner, dtype),
+        "conv_w": (jax.random.normal(r[1], (conv, d_inner), jnp.float32)
+                   * 0.1).astype(dtype),
+        "x_proj": L.dense_init(r[2], d_inner, dt_rank + 2 * state, dtype),
+        "dt_proj": L.dense_init(r[3], dt_rank, d_inner, dtype),
+        "dt_bias": jnp.zeros((d_inner,), jnp.float32),
+        "a_log": jnp.log(a),                        # (d_inner, N) f32
+        "d_skip": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": L.dense_init(r[4], d_inner, d_model, dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: (B, S, C); w: (K, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(k):  # K is tiny (4): unrolled taps fuse into one kernel
+        out = out + xp[:, i:i + x.shape[1]].astype(jnp.float32) \
+            * w[i].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def _split_xdbc(p: Dict, xc: jax.Array, state: int):
+    dt_rank = p["dt_proj"].shape[0]
+    xdbc = xc @ p["x_proj"]
+    dt_r, b, c = jnp.split(xdbc, [dt_rank, dt_rank + state], axis=-1)
+    dt = jax.nn.softplus(dt_r @ p["dt_proj"]
+                         + p["dt_bias"].astype(xdbc.dtype))
+    return dt, b, c
+
+
+def mamba_forward(p: Dict, x: jax.Array, *, state: int = 16,
+                  impl: str = "ref") -> jax.Array:
+    """Train/prefill: x (B, S, d) -> (B, S, d)."""
+    bsz, s, _ = x.shape
+    xz = x @ p["in_proj"]
+    xc, z = jnp.split(xz, 2, axis=-1)               # (B, S, d_inner)
+    xc = jax.nn.silu(_causal_conv(xc, p["conv_w"]))
+    dt, b, c = _split_xdbc(p, xc, state)
+    a = -jnp.exp(p["a_log"])                        # (d_inner, N)
+    y = ssm_scan(xc, dt, b, c, a, p["d_skip"], impl=impl)
+    y = y * jax.nn.silu(z)
+    return y @ p["out_proj"]
+
+
+def init_mamba_cache(batch: int, d_model: int, *, expand: int = 2,
+                     state: int = 16, conv: int = 4,
+                     dtype=jnp.bfloat16) -> Dict:
+    d_inner = expand * d_model
+    return {
+        "conv": jnp.zeros((batch, conv - 1, d_inner), dtype),
+        "ssm": jnp.zeros((batch, d_inner, state), jnp.float32),
+    }
+
+
+def mamba_decode(p: Dict, x: jax.Array, cache: Dict, *, state: int = 16
+                 ) -> Tuple[jax.Array, Dict]:
+    """One token: x (B, d) -> (B, d); O(d_inner * N) state update."""
+    xz = x @ p["in_proj"]
+    xc, z = jnp.split(xz, 2, axis=-1)               # (B, d_inner)
+    # conv over [cache_tail, x]
+    window = jnp.concatenate([cache["conv"], xc[:, None]], axis=1)
+    w = p["conv_w"].astype(jnp.float32)             # (K, d_inner)
+    conv_out = jnp.sum(window.astype(jnp.float32) * w[None], axis=1)
+    xc = jax.nn.silu(conv_out.astype(x.dtype))
+    dt, b, c = _split_xdbc(p, xc, state)
+    a = -jnp.exp(p["a_log"])
+    h, y = single_step(cache["ssm"], xc, dt, b, c, a, p["d_skip"])
+    y = y * jax.nn.silu(z)
+    new_cache = {"conv": window[:, 1:].astype(cache["conv"].dtype),
+                 "ssm": h}
+    return y @ p["out_proj"], new_cache

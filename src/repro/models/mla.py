@@ -1,0 +1,160 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+Train/prefill: the full (de-compressed) form -- per-head K_nope/V are
+materialized from the kv_lora latent and attention runs through the
+flash-attention impl switch with head_dim = nope + rope.
+
+Decode: the *absorbed* form (the MLA serving trick): the cache stores only
+the latent c_kv (B, S, kv_lora) and the shared roped key k_rope
+(B, S, rope_dim); W_uk is absorbed into the query and W_uv into the output
+so scores/values contract directly against the latent -- per-token cache
+bytes are kv_lora + rope_dim (= 576) instead of 2*H*D.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.ops import attention as flash_attention
+from repro.models import layers as L
+
+
+def mla_init(rng, cfg, dtype=jnp.bfloat16) -> Dict:
+    d = cfg.d_model
+    h = cfg.n_heads
+    r = jax.random.split(rng, 8)
+    return {
+        "w_dq": L.dense_init(r[0], d, cfg.q_lora, dtype),
+        "q_norm": L.rmsnorm_init(cfg.q_lora, dtype),
+        "w_uq": L.dense_init(r[1], cfg.q_lora,
+                             h * (cfg.nope_head_dim + cfg.rope_head_dim),
+                             dtype),
+        "w_dkv": L.dense_init(r[2], d, cfg.kv_lora, dtype),
+        "kv_norm": L.rmsnorm_init(cfg.kv_lora, dtype),
+        "w_krope": L.dense_init(r[3], d, cfg.rope_head_dim, dtype),
+        "w_uk": L.dense_init(r[4], cfg.kv_lora, h * cfg.nope_head_dim,
+                             dtype),
+        "w_uv": L.dense_init(r[5], cfg.kv_lora, h * cfg.v_head_dim, dtype),
+        "wo": L.dense_init(r[6], h * cfg.v_head_dim, d, dtype),
+    }
+
+
+def _project_q(p: Dict, x: jax.Array, cfg, positions) -> Tuple[jax.Array,
+                                                               jax.Array]:
+    """-> q_nope (B,S,H,Dn), q_rope (B,S,H,Dr) (rope applied)."""
+    b = x.shape[0]
+    s = x.shape[1] if x.ndim == 3 else 1
+    x2 = x if x.ndim == 3 else x[:, None]
+    cq = L.rmsnorm(x2 @ p["w_dq"], p["q_norm"])
+    q = (cq @ p["w_uq"]).reshape(b, s, cfg.n_heads,
+                                 cfg.nope_head_dim + cfg.rope_head_dim)
+    q_nope, q_rope = jnp.split(q, [cfg.nope_head_dim], axis=-1)
+    q_rope = L.apply_rope(q_rope.transpose(0, 2, 1, 3), positions,
+                          cfg.rope_theta).transpose(0, 2, 1, 3)
+    return q_nope, q_rope
+
+
+def mla_forward(p: Dict, x: jax.Array, cfg, *, causal: bool = True,
+                impl: str = "chunked") -> jax.Array:
+    """Full form. x: (B, S, d)."""
+    b, s, _ = x.shape
+    pos = jnp.arange(s)
+    q_nope, q_rope = _project_q(p, x, cfg, pos)
+
+    c_kv = L.rmsnorm(x @ p["w_dkv"], p["kv_norm"])           # (B,S,kv_lora)
+    k_rope = L.apply_rope((x @ p["w_krope"])[:, None], pos,
+                          cfg.rope_theta)[:, 0]              # (B,S,Dr)
+    k_nope = (c_kv @ p["w_uk"]).reshape(b, s, cfg.n_heads,
+                                        cfg.nope_head_dim)
+    v = (c_kv @ p["w_uv"]).reshape(b, s, cfg.n_heads, cfg.v_head_dim)
+
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None],
+                                  (b, s, cfg.n_heads, cfg.rope_head_dim))],
+        axis=-1)
+    # flash kernel wants v head dim == qk head dim: zero-pad v (192 vs 128
+    # for deepseek-v2) and slice the output back
+    dq = cfg.nope_head_dim + cfg.rope_head_dim
+    pad = dq - cfg.v_head_dim
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, pad))) if pad else v
+    o = flash_attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                        vp.transpose(0, 2, 1, 3), causal=causal, impl=impl)
+    o = o.transpose(0, 2, 1, 3)[..., :cfg.v_head_dim].reshape(b, s, -1)
+    return o @ p["wo"]
+
+
+def init_mla_cache(batch: int, max_seq: int, cfg,
+                   dtype=jnp.bfloat16) -> Dict:
+    return {
+        "c_kv": jnp.zeros((batch, max_seq, cfg.kv_lora), dtype),
+        "k_rope": jnp.zeros((batch, max_seq, cfg.rope_head_dim), dtype),
+    }
+
+
+def mla_prefill(p: Dict, x: jax.Array, cache: Dict, cfg, *,
+                impl: str = "chunked") -> Tuple[jax.Array, Dict]:
+    b, s, _ = x.shape
+    out = mla_forward(p, x, cfg, causal=True, impl=impl)
+    pos = jnp.arange(s)
+    c_kv = L.rmsnorm(x @ p["w_dkv"], p["kv_norm"])
+    k_rope = L.apply_rope((x @ p["w_krope"])[:, None], pos,
+                          cfg.rope_theta)[:, 0]
+    new_cache = {
+        "c_kv": jax.lax.dynamic_update_slice(
+            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, 0, 0)),
+        "k_rope": jax.lax.dynamic_update_slice(
+            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype),
+            (0, 0, 0)),
+    }
+    return out, new_cache
+
+
+def mla_decode(p: Dict, x: jax.Array, cache: Dict, pos: jax.Array, cfg
+               ) -> Tuple[jax.Array, Dict]:
+    """Absorbed decode. x: (B, d); pos: (B,)."""
+    b, d = x.shape
+    h, dn, dr = cfg.n_heads, cfg.nope_head_dim, cfg.rope_head_dim
+    q_nope, q_rope = _project_q(p, x, cfg, pos[:, None, None])
+    q_nope = q_nope[:, 0]                                    # (B,H,Dn)
+    q_rope = q_rope[:, 0]                                    # (B,H,Dr)
+
+    # new latent entry
+    c_new = L.rmsnorm(x @ p["w_dkv"], p["kv_norm"])          # (B, kv_lora)
+    kr_new = L.apply_rope((x @ p["w_krope"])[:, None, None],
+                          pos[:, None, None], cfg.rope_theta)[:, 0, 0]
+    s_max = cache["c_kv"].shape[1]
+    slot = jnp.arange(s_max)[None, :, None] == pos[:, None, None]
+    cache = {
+        "c_kv": jnp.where(slot, c_new[:, None].astype(cache["c_kv"].dtype),
+                          cache["c_kv"]),
+        "k_rope": jnp.where(slot,
+                            kr_new[:, None].astype(cache["k_rope"].dtype),
+                            cache["k_rope"]),
+    }
+
+    # absorb W_uk into q: q_c (B,H,kv_lora)
+    w_uk = p["w_uk"].reshape(cfg.kv_lora, h, dn)
+    q_c = jnp.einsum("bhd,lhd->bhl", q_nope.astype(jnp.float32),
+                     w_uk.astype(jnp.float32))
+    scale = 1.0 / jnp.sqrt(dn + dr)
+    logits = (jnp.einsum("bhl,bsl->bhs", q_c.astype(cache["c_kv"].dtype),
+                         cache["c_kv"],
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bhr,bsr->bhs", q_rope,
+                           cache["k_rope"],
+                           preferred_element_type=jnp.float32)) * scale
+    mask = jnp.arange(s_max)[None, None, :] <= pos[:, None, None]
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    ctx = jnp.einsum("bhs,bsl->bhl", probs.astype(cache["c_kv"].dtype),
+                     cache["c_kv"],
+                     preferred_element_type=jnp.float32)     # (B,H,kv_lora)
+    # absorb W_uv into output: v_head per head
+    w_uv = p["w_uv"].reshape(cfg.kv_lora, h, cfg.v_head_dim)
+    o = jnp.einsum("bhl,lhv->bhv", ctx, w_uv.astype(jnp.float32))
+    o = o.reshape(b, h * cfg.v_head_dim).astype(x.dtype)
+    return o @ p["wo"], cache

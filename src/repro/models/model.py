@@ -1,0 +1,171 @@
+"""Model facade: build (init, loss, train_step, prefill, decode) per arch.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+input of the cell's step function -- the dry-run lowers against these, so
+no host memory is ever allocated for the full-size models.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.train import optimizer as OPT
+
+AUX_WEIGHT = 0.01
+
+
+# --------------------------------------------------------------------- #
+# loss / train step
+# --------------------------------------------------------------------- #
+def loss_fn(params, cfg: ArchConfig, batch: Dict[str, jax.Array],
+            attn_impl: str = "chunked", ssm_impl: str = "ref",
+            remat: bool = False
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    logits, aux = T.forward_train(params, cfg, batch["tokens"],
+                                  memory=batch.get("memory"),
+                                  attn_impl=attn_impl, ssm_impl=ssm_impl,
+                                  remat=remat)
+    nll = L.cross_entropy(logits, batch["labels"])
+    loss = nll + AUX_WEIGHT * aux
+    return loss, {"nll": nll, "aux": aux}
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: OPT.AdamWConfig,
+                    attn_impl: str = "qchunk", ssm_impl: str = "ref",
+                    n_micro: int = 1, remat: bool = True,
+                    compress_grads: bool = False):
+    """n_micro > 1 scans gradient-accumulation microbatches; remat wraps
+    every scanned block in jax.checkpoint (activation recompute);
+    compress_grads quantizes gradients to int8 with error feedback before
+    the optimizer (the DP all-reduce then moves 1/4 the bytes -- the
+    cross-pod DCI lever of DESIGN.md §5).  The EF residual rides in the
+    returned opt_state tuple."""
+    from repro.train import grad as G
+
+    def lfn(p, b):
+        return loss_fn(p, cfg, b, attn_impl, ssm_impl, remat=remat)
+
+    def train_step(state, opt_state, batch):
+        if compress_grads:
+            params, ef = state
+        else:
+            params, ef = state, None
+        loss, grads, metrics = G.accumulate_grads(lfn, params, batch,
+                                                  n_micro)
+        if compress_grads:
+            grads, ef = G.compress_grads_ef(grads, ef)
+        params, opt_state, opt_metrics = OPT.update(
+            opt_cfg, params, grads, opt_state)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        out_state = (params, ef) if compress_grads else params
+        return out_state, opt_state, metrics
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, attn_impl: str = "chunked",
+                      ssm_impl: str = "ref"):
+    def prefill_step(params, tokens, caches, memory=None):
+        return T.forward_prefill(params, cfg, tokens, caches,
+                                 memory=memory, attn_impl=attn_impl,
+                                 ssm_impl=ssm_impl)
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, attn_impl: str = "xla"):
+    # decode is a single-query attention: the full einsum + masked softmax
+    # is optimal and fully shardable (no dynamic slices over the sharded
+    # cache); 'chunked' only helps with a scan, which SPMD re-materializes.
+    def decode_step(params, token, caches, pos):
+        return T.forward_decode(params, cfg, token, caches, pos,
+                                attn_impl=attn_impl)
+    return decode_step
+
+
+# --------------------------------------------------------------------- #
+# shape-struct builders (dry-run inputs)
+# --------------------------------------------------------------------- #
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def memory_len(cfg: ArchConfig, shape: ShapeCell) -> int:
+    """Stub modality-token count for VLM/audio frontends."""
+    if cfg.family == "audio":
+        # speech frames after the (stubbed) frontend: seq/4
+        return max(16, shape.seq_len // 4)
+    if cfg.family == "vlm":
+        return cfg.frontend_tokens
+    return 0
+
+
+def param_specs(cfg: ArchConfig) -> Any:
+    """ShapeDtypeStructs of the parameter pytree (no allocation)."""
+    rng = jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda r: T.init_params(r, cfg), rng)
+
+
+def cache_specs(cfg: ArchConfig, batch: int, max_seq: int,
+                mem_len: int = 0) -> Any:
+    return jax.eval_shape(
+        lambda: T.init_caches(cfg, batch, max_seq, memory_len=mem_len))
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeCell) -> Dict[str, Any]:
+    """All step-function inputs as ShapeDtypeStructs, per cell kind."""
+    b, s = shape.global_batch, shape.seq_len
+    mem = memory_len(cfg, shape)
+    if shape.kind == "train":
+        batch = {"tokens": _sds((b, s), jnp.int32),
+                 "labels": _sds((b, s), jnp.int32)}
+        if mem:
+            batch["memory"] = _sds((b, mem, cfg.d_model), jnp.bfloat16)
+        return {"batch": batch}
+    if shape.kind == "prefill":
+        out = {"tokens": _sds((b, s), jnp.int32),
+               "caches": cache_specs(cfg, b, s, mem)}
+        if mem:
+            out["memory"] = _sds((b, mem, cfg.d_model), jnp.bfloat16)
+        return out
+    if shape.kind == "decode":
+        return {"token": _sds((b,), jnp.int32),
+                "caches": cache_specs(cfg, b, s, mem),
+                "pos": _sds((b,), jnp.int32)}
+    raise ValueError(shape.kind)
+
+
+def opt_state_specs(cfg: ArchConfig) -> Any:
+    ps = param_specs(cfg)
+    return jax.eval_shape(lambda: OPT.init(jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype), ps)))
+
+
+def param_count(cfg: ArchConfig) -> int:
+    ps = param_specs(cfg)
+    total = 0
+    for s in jax.tree.leaves(ps):
+        n = 1
+        for d in s.shape:
+            n *= int(d)   # python ints: no int32 overflow on 398B models
+        total += n
+    return total
+
+
+def active_param_count(cfg: ArchConfig) -> int:
+    """Active params per token (MoE: top_k + shared of the routed pool)."""
+    total = param_count(cfg)
+    if not cfg.n_experts:
+        return total
+    # subtract inactive experts
+    e_ff = cfg.moe_d_ff or cfg.d_ff
+    per_expert = 3 * cfg.d_model * e_ff
+    n_moe_layers = sum(cfg.is_moe_layer(i) for i in range(cfg.n_layers))
+    inactive = (cfg.n_experts - cfg.top_k) * per_expert * n_moe_layers
+    return total - inactive

@@ -1,0 +1,167 @@
+"""Mixture-of-Experts layer: top-k routing, sort-based capacity dispatch.
+
+Expert-parallel posture: expert weights are stacked (E, ...) and sharded
+over the ``model`` mesh axis; tokens are sharded over ``data``.  Dispatch
+is sort-based (no (T, E, C) one-hot): flatten (token, expert-choice) pairs,
+argsort by expert, compute position-within-expert from cumulative counts,
+scatter into an (E, C, d) buffer (capacity drop), run batched expert
+matmuls, gather back with routing weights.  Under pjit this lowers to the
+all-to-all-style collectives the roofline analysis attributes to EP.
+
+Also returns the Switch-style load-balancing auxiliary loss.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+
+
+def _maybe_shard(x: jax.Array, *spec):
+    """with_sharding_constraint when a mesh context is active (dry-run /
+    launch paths); no-op in mesh-less unit tests.  GSPMD replicates the
+    data-dependent dispatch gathers/scatters without these hints (§Perf
+    A7) -- pinning the token-major arrays to the data axis keeps the
+    (T*k, d) combine buffers sharded and turns the token->expert scatter
+    into the intended all-to-all."""
+    try:
+        from jax.interpreters.pxla import thread_resources
+        mesh = thread_resources.env.physical_mesh
+        if mesh.empty or any(ax is not None and ax not in mesh.axis_names
+                             for ax in spec):
+            return x
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except Exception:  # noqa: BLE001 -- sharding is best-effort here
+        return x
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEDims:
+    n_experts: int
+    top_k: int
+    d_model: int
+    d_ff: int
+    n_shared: int = 0
+    capacity_factor: float = 1.25
+    # device-limited routing (DeepSeek-V2): tokens may route into at most
+    # ``route_limit`` of ``route_groups`` expert groups (groups == EP
+    # shards), bounding the all-to-all fan-out per token.
+    route_groups: int = 0
+    route_limit: int = 0
+    # quantize the dispatch payload to int8 (per-token scale): halves the
+    # dispatch leg of the a2a (DeepSeek-V3-style low-precision dispatch).
+    int8_dispatch: bool = False
+
+
+def moe_init(rng, dims: MoEDims, dtype=jnp.bfloat16) -> Dict:
+    r = jax.random.split(rng, 5)
+    e, d, f = dims.n_experts, dims.d_model, dims.d_ff
+    def expert_stack(key, d_in, d_out):
+        scale = 1.0 / jnp.sqrt(d_in)
+        return (jax.random.normal(key, (e, d_in, d_out), jnp.float32)
+                * scale).astype(dtype)
+    p = {
+        "router": L.dense_init(r[0], d, e, jnp.float32, scale=0.02),
+        "w_gate": expert_stack(r[1], d, f),
+        "w_up": expert_stack(r[2], d, f),
+        "w_down": expert_stack(r[3], f, d),
+    }
+    if dims.n_shared:
+        p["shared"] = L.swiglu_init(r[4], d, f * dims.n_shared, dtype)
+    return p
+
+
+def capacity(n_tokens: int, dims: MoEDims) -> int:
+    per = n_tokens * dims.top_k * dims.capacity_factor / dims.n_experts
+    return max(8, int(-(-per // 8) * 8))  # round up to 8
+
+
+def moe_apply(p: Dict, x: jax.Array, dims: MoEDims
+              ) -> Tuple[jax.Array, jax.Array]:
+    """x: (T, d) flat tokens. Returns (out (T, d), aux_loss scalar)."""
+    t, d = x.shape
+    e, k = dims.n_experts, dims.top_k
+    c = capacity(t, dims)
+
+    router_logits = (x.astype(jnp.float32) @ p["router"])          # (T, E)
+    probs = jax.nn.softmax(router_logits, axis=-1)
+    if dims.route_groups > 1 and 0 < dims.route_limit < dims.route_groups:
+        # device-limited routing: keep only experts in the token's top-M
+        # groups (group affinity = max expert prob in the group)
+        g = dims.route_groups
+        per = e // g
+        group_score = probs.reshape(t, g, per).max(axis=-1)        # (T, G)
+        _, top_g = jax.lax.top_k(group_score, dims.route_limit)
+        gmask = jnp.zeros((t, g), bool).at[
+            jnp.arange(t)[:, None], top_g].set(True)
+        probs = jnp.where(jnp.repeat(gmask, per, axis=1), probs, 0.0)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)                  # (T, K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # Switch aux loss: E * sum_e (fraction_e * mean_prob_e)
+    one_hot = jax.nn.one_hot(gate_idx[:, 0], e, dtype=jnp.float32)
+    fraction = jnp.mean(one_hot, axis=0)
+    mean_prob = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(fraction * mean_prob)
+
+    # ---- sort-based dispatch ------------------------------------------
+    flat_e = gate_idx.reshape(-1)                                  # (T*K,)
+    flat_t = jnp.repeat(jnp.arange(t), k)
+    flat_w = gate_vals.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    sorted_t = flat_t[order]
+    sorted_w = flat_w[order]
+    counts = jnp.bincount(flat_e, length=e)                        # (E,)
+    starts = jnp.cumsum(counts) - counts
+    pos_in_e = jnp.arange(t * k) - starts[sorted_e]
+    keep = pos_in_e < c
+
+    scatter_e = jnp.where(keep, sorted_e, 0)
+    scatter_p = jnp.where(keep, pos_in_e, c - 1)
+    vals = jnp.where(keep[:, None], x[sorted_t], 0)
+    vals = _maybe_shard(vals, "data", None)
+    if dims.int8_dispatch:
+        # quantize the payload that crosses the a2a; dequantize on the
+        # expert's device (per-token symmetric scale)
+        scale = jnp.maximum(jnp.max(jnp.abs(
+            vals.astype(jnp.float32)), axis=-1, keepdims=True),
+            1e-6) / 127.0
+        q = jnp.clip(jnp.round(vals.astype(jnp.float32) / scale),
+                     -127, 127).astype(jnp.int8)
+        qbuf = jnp.zeros((e, c, d), jnp.int8).at[
+            scatter_e, scatter_p].add(q, mode="drop")
+        sbuf = jnp.zeros((e, c, 1), jnp.float32).at[
+            scatter_e, scatter_p].add(scale, mode="drop")
+        buf = (qbuf.astype(jnp.bfloat16)
+               * sbuf.astype(jnp.bfloat16)).astype(x.dtype)
+    else:
+        buf = jnp.zeros((e, c, d), x.dtype).at[scatter_e, scatter_p].add(
+            vals.astype(x.dtype), mode="drop")
+
+    # ---- expert compute (E over 'data' (EP=DP); ff over 'model') ------
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])) \
+        * jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    y = jnp.einsum("ecf,efd->ecd", h, p["w_down"])                 # (E,C,d)
+
+    # ---- combine -------------------------------------------------------
+    gathered = y[scatter_e, scatter_p]                             # (T*K, d)
+    gathered = _maybe_shard(gathered, "data", None)
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    # bf16 combine halves the (T*k, d) buffers; the residual stream and
+    # gradient accumulation stay f32 upstream (§Perf A7b)
+    contrib = (gathered * sorted_w[:, None].astype(gathered.dtype))
+    out = jnp.zeros((t, d), contrib.dtype).at[sorted_t].add(contrib)
+    out = _maybe_shard(out, "data", None)
+
+    out = out.astype(x.dtype)
+    if "shared" in p:
+        out = out + L.swiglu(x, p["shared"])
+    return out, aux

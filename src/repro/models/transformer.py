@@ -1,0 +1,470 @@
+"""Architecture assembly: pattern-tiled blocks, scan-over-layers, serving.
+
+Layer patterns (``ArchConfig.pattern``) tile to ``n_layers``; parameters
+are *stacked per pattern slot* across repetitions and applied with
+``jax.lax.scan`` so the HLO stays O(pattern) instead of O(n_layers) --
+essential for 60-72-layer archs compiled for 512 devices.
+
+Block kinds:
+  'attn'   self-attention (+FFN)            -- dense/moe/hybrid layers
+  'cross'  self-attention + cross-attention (+FFN)  -- VLM / enc-dec
+  'mamba'  Mamba mixer (+FFN)               -- jamba
+  'mlstm'  mLSTM block (self-contained, no FFN when d_ff == 0)
+  'slstm'  sLSTM block (+FFN when d_ff > 0)
+
+MoE placement: ``cfg.is_moe_layer(global_idx)``; with pattern length a
+multiple of ``moe_every`` the slot's FFN kind is rep-invariant, which is
+what makes the scan homogeneous.  ``first_layer_dense`` (deepseek-v2)
+unrolls layer 0 outside the scan.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models import mla as MLA
+from repro.models import moe as MOE
+from repro.models import xlstm as X
+
+
+# --------------------------------------------------------------------- #
+# helpers
+# --------------------------------------------------------------------- #
+def _norm_init(cfg: ArchConfig, d: int):
+    return (L.rmsnorm_init(d) if cfg.norm == "rmsnorm"
+            else L.layernorm_init(d))
+
+
+def _norm(cfg: ArchConfig, x, p):
+    return L.rmsnorm(x, p) if cfg.norm == "rmsnorm" else L.layernorm(x, p)
+
+
+def _ffn_init(rng, cfg: ArchConfig, moe_layer: bool):
+    if moe_layer:
+        return MOE.moe_init(rng, _moe_dims(cfg))
+    d_ff = cfg.dense_d_ff or cfg.d_ff
+    if d_ff == 0:
+        return None
+    if cfg.act == "swiglu":
+        return L.swiglu_init(rng, cfg.d_model, d_ff)
+    return L.gelu_mlp_init(rng, cfg.d_model, d_ff)
+
+
+def _moe_dims(cfg: ArchConfig) -> MOE.MoEDims:
+    return MOE.MoEDims(cfg.n_experts, cfg.top_k, cfg.d_model,
+                       cfg.moe_d_ff or cfg.d_ff, cfg.n_shared_experts,
+                       cfg.capacity_factor,
+                       route_groups=cfg.route_groups,
+                       route_limit=cfg.route_limit,
+                       int8_dispatch=cfg.int8_dispatch)
+
+
+def _ffn_apply(cfg: ArchConfig, p, x2d: jax.Array, moe_layer: bool
+               ) -> Tuple[jax.Array, jax.Array]:
+    """x2d: (T, d). Returns (out, aux)."""
+    if moe_layer:
+        return MOE.moe_apply(p, x2d, _moe_dims(cfg))
+    if cfg.act == "swiglu":
+        return L.swiglu(x2d, p), jnp.float32(0.0)
+    return L.gelu_mlp(x2d, p), jnp.float32(0.0)
+
+
+def _mixer_init(rng, cfg: ArchConfig, kind: str):
+    hd = cfg.resolved_head_dim
+    if kind in ("attn", "cross"):
+        if cfg.mla:
+            p = {"self": MLA.mla_init(rng, cfg)}
+        else:
+            p = {"self": A.attn_init(rng, cfg.d_model, cfg.n_heads,
+                                     cfg.n_kv_heads, hd)}
+        if kind == "cross":
+            r2 = jax.random.fold_in(rng, 1)
+            p["cross"] = A.cross_init(r2, cfg.d_model, cfg.n_heads,
+                                      cfg.n_kv_heads, hd)
+            p["norm_c"] = _norm_init(cfg, cfg.d_model)
+        return p
+    if kind == "mamba":
+        return {"mamba": M.mamba_init(rng, cfg.d_model,
+                                      expand=cfg.ssm_expand,
+                                      state=cfg.ssm_state,
+                                      conv=cfg.ssm_conv)}
+    if kind == "mlstm":
+        return {"mlstm": X.mlstm_init(rng, cfg.d_model, cfg.n_heads)}
+    if kind == "slstm":
+        return {"slstm": X.slstm_init(rng, cfg.d_model, cfg.n_heads)}
+    raise ValueError(kind)
+
+
+def _block_init(rng, cfg: ArchConfig, kind: str, moe_layer: bool) -> Dict:
+    r1, r2 = jax.random.split(rng)
+    p = {"norm1": _norm_init(cfg, cfg.d_model),
+         "mixer": _mixer_init(r1, cfg, kind)}
+    ffn = _ffn_init(r2, cfg, moe_layer)
+    if ffn is not None:
+        p["norm2"] = _norm_init(cfg, cfg.d_model)
+        p["ffn"] = ffn
+    return p
+
+
+# --------------------------------------------------------------------- #
+# block apply (all modes)
+# --------------------------------------------------------------------- #
+def _block_apply(cfg: ArchConfig, kind: str, moe_layer: bool, p: Dict,
+                 x: jax.Array, *, mode: str,
+                 cache: Optional[Dict] = None,
+                 pos: Optional[jax.Array] = None,
+                 memory: Optional[jax.Array] = None,
+                 memory_kv: Optional[Dict] = None,
+                 causal: bool = True,
+                 attn_impl: str = "chunked",
+                 ssm_impl: str = "ref"):
+    """Returns (x, new_cache, aux)."""
+    hd = cfg.resolved_head_dim
+    aux = jnp.float32(0.0)
+    new_cache: Dict[str, Any] = {}
+    h = _norm(cfg, x, p["norm1"])
+
+    if kind in ("attn", "cross"):
+        if mode == "train":
+            if cfg.mla:
+                o = MLA.mla_forward(p["mixer"]["self"], h, cfg,
+                                    causal=causal, impl=attn_impl)
+            else:
+                o = A.attn_forward(p["mixer"]["self"], h,
+                                   n_heads=cfg.n_heads,
+                                   n_kv_heads=cfg.n_kv_heads, head_dim=hd,
+                                   rope_theta=cfg.rope_theta,
+                                   causal=causal, impl=attn_impl)
+        elif mode == "prefill":
+            if cfg.mla:
+                o, kv = MLA.mla_prefill(p["mixer"]["self"], h,
+                                        cache["kv"], cfg, impl=attn_impl)
+            else:
+                o, kv = A.attn_prefill(p["mixer"]["self"], h, cache["kv"],
+                                       n_heads=cfg.n_heads,
+                                       n_kv_heads=cfg.n_kv_heads,
+                                       head_dim=hd,
+                                       rope_theta=cfg.rope_theta,
+                                       impl=attn_impl)
+            new_cache["kv"] = kv
+        else:  # decode
+            if cfg.mla:
+                o, kv = MLA.mla_decode(p["mixer"]["self"], h, cache["kv"],
+                                       pos, cfg)
+            else:
+                o, kv = A.attn_decode(p["mixer"]["self"], h, cache["kv"],
+                                      pos, n_heads=cfg.n_heads,
+                                      n_kv_heads=cfg.n_kv_heads,
+                                      head_dim=hd,
+                                      rope_theta=cfg.rope_theta,
+                                      impl=attn_impl)
+            new_cache["kv"] = kv
+        x = x + o
+        if kind == "cross":
+            hc = _norm(cfg, x, p["mixer"]["norm_c"])
+            if mode == "decode":
+                oc = A.cross_decode(p["mixer"]["cross"], hc,
+                                    memory_kv, n_heads=cfg.n_heads,
+                                    n_kv_heads=cfg.n_kv_heads, head_dim=hd,
+                                    impl=attn_impl)
+            else:
+                oc = A.cross_forward(p["mixer"]["cross"], hc, memory,
+                                     n_heads=cfg.n_heads,
+                                     n_kv_heads=cfg.n_kv_heads,
+                                     head_dim=hd, impl=attn_impl)
+            x = x + oc
+
+    elif kind == "mamba":
+        if mode == "decode":
+            o, mc = M.mamba_decode(p["mixer"]["mamba"], h, cache["mamba"],
+                                   state=cfg.ssm_state)
+            new_cache["mamba"] = mc
+        else:
+            o = M.mamba_forward(p["mixer"]["mamba"], h,
+                                state=cfg.ssm_state, impl=ssm_impl)
+            if mode == "prefill":
+                # recompute final state cheaply is skipped: serving enters
+                # decode with the scan's terminal state; for the dry-run
+                # prefill cells the state is carried through new_cache
+                new_cache["mamba"] = cache["mamba"]
+        x = x + o
+
+    elif kind == "mlstm":
+        if mode == "decode":
+            o, mc = X.mlstm_decode(p["mixer"]["mlstm"], h, cache["mlstm"],
+                                   cfg.n_heads)
+            new_cache["mlstm"] = mc
+        else:
+            o = X.mlstm_forward(p["mixer"]["mlstm"], h, cfg.n_heads)
+            if mode == "prefill":
+                new_cache["mlstm"] = cache["mlstm"]
+        x = x + o
+
+    elif kind == "slstm":
+        if mode == "decode":
+            o, sc = X.slstm_decode(p["mixer"]["slstm"], h, cache["slstm"],
+                                   cfg.n_heads)
+            new_cache["slstm"] = sc
+        else:
+            o = X.slstm_forward(p["mixer"]["slstm"], h, cfg.n_heads)
+            if mode == "prefill":
+                new_cache["slstm"] = cache["slstm"]
+        x = x + o
+    else:
+        raise ValueError(kind)
+
+    if "ffn" in p:
+        h2 = _norm(cfg, x, p["norm2"])
+        shp = h2.shape
+        out, aux = _ffn_apply(cfg, p["ffn"], h2.reshape(-1, shp[-1]),
+                              moe_layer)
+        x = x + out.reshape(shp)
+    return x, new_cache, aux
+
+
+def _mask_padded(logits: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """-inf the vocab-padding tail so softmax/CE/sampling ignore it."""
+    if cfg.padded_vocab == cfg.vocab:
+        return logits
+    keep = jnp.arange(cfg.padded_vocab) < cfg.vocab
+    return jnp.where(keep, logits, -1e30)
+
+
+# --------------------------------------------------------------------- #
+# parameter init
+# --------------------------------------------------------------------- #
+def slot_kinds(cfg: ArchConfig) -> List[Tuple[str, bool]]:
+    """(kind, is_moe) per pattern slot (rep-invariant by construction)."""
+    pat = cfg.pattern
+    n_prefix = 1 if cfg.first_layer_dense else 0
+    out = []
+    for j, kind in enumerate(pat):
+        gidx = n_prefix + j  # any rep works; check invariance below
+        out.append((kind, cfg.is_moe_layer(gidx)))
+    # invariance check
+    reps = (cfg.n_layers - n_prefix) // len(pat)
+    for r in range(reps):
+        for j, kind in enumerate(pat):
+            gidx = n_prefix + r * len(pat) + j
+            assert cfg.is_moe_layer(gidx) == out[j][1], (
+                "pattern/moe_every mismatch: scan would be heterogeneous")
+    return out
+
+
+def n_scan_reps(cfg: ArchConfig) -> int:
+    n_prefix = 1 if cfg.first_layer_dense else 0
+    n = cfg.n_layers - n_prefix
+    if n % len(cfg.pattern):
+        raise ValueError(f"{cfg.name}: {n} layers not divisible by "
+                         f"pattern {len(cfg.pattern)}")
+    return n // len(cfg.pattern)
+
+
+def init_params(rng, cfg: ArchConfig) -> Dict:
+    reps = n_scan_reps(cfg)
+    kinds = slot_kinds(cfg)
+    r_embed, r_blocks, r_first, r_enc = jax.random.split(rng, 4)
+
+    params: Dict[str, Any] = {
+        "embed": L.embedding_init(r_embed, cfg.padded_vocab, cfg.d_model),
+        "final_norm": _norm_init(cfg, cfg.d_model),
+    }
+    if cfg.first_layer_dense:
+        params["first"] = _block_init(r_first, cfg, "attn", False)
+
+    # stacked per-slot params: vmap the per-rep init over rep rngs
+    slots = []
+    for j, (kind, moe_layer) in enumerate(kinds):
+        rj = jax.random.fold_in(r_blocks, j)
+        rep_rngs = jax.random.split(rj, reps)
+        stacked = jax.vmap(
+            lambda r: _block_init(r, cfg, kind, moe_layer))(rep_rngs)
+        slots.append(stacked)
+    params["slots"] = slots
+
+    if cfg.encoder_layers:
+        enc_rngs = jax.random.split(r_enc, cfg.encoder_layers)
+        params["encoder"] = jax.vmap(
+            lambda r: _block_init(r, cfg, "attn", False))(enc_rngs)
+        params["enc_norm"] = _norm_init(cfg, cfg.d_model)
+    return params
+
+
+# --------------------------------------------------------------------- #
+# forward passes
+# --------------------------------------------------------------------- #
+def encode(params: Dict, cfg: ArchConfig, frames: jax.Array,
+           attn_impl: str = "chunked") -> jax.Array:
+    """Bidirectional encoder over precomputed frontend embeddings."""
+    def body(x, p):
+        x, _, _ = _block_apply(cfg, "attn", False, p, x, mode="train",
+                               causal=False, attn_impl=attn_impl)
+        return x, None
+    x, _ = jax.lax.scan(body, frames, params["encoder"])
+    return _norm(cfg, x, params["enc_norm"])
+
+
+def _scan_blocks(params, cfg: ArchConfig, x, *, mode, caches=None,
+                 pos=None, memory=None, memory_kv=None,
+                 attn_impl="chunked", ssm_impl="ref", remat=False):
+    """Apply prefix + pattern-scanned blocks.  Returns (x, new_caches, aux)."""
+    kinds = slot_kinds(cfg)
+    aux_total = jnp.float32(0.0)
+    new_caches: Dict[str, Any] = {}
+
+    if cfg.first_layer_dense:
+        c = caches.get("first") if caches else None
+        x, nc, aux = _block_apply(cfg, "attn", False, params["first"], x,
+                                  mode=mode, cache=c, pos=pos,
+                                  attn_impl=attn_impl, ssm_impl=ssm_impl)
+        new_caches["first"] = nc
+        aux_total += aux
+
+    def body(carry, xs):
+        x, aux_acc = carry
+        slot_params, slot_caches, mem_kv_r = xs
+        new_slot_caches = []
+        for j, (kind, moe_layer) in enumerate(kinds):
+            c = slot_caches[j] if slot_caches is not None else None
+            mkv = (mem_kv_r[j] if (mem_kv_r is not None and
+                                   kind == "cross") else None)
+            x, nc, aux = _block_apply(
+                cfg, kind, moe_layer, slot_params[j], x, mode=mode,
+                cache=c, pos=pos, memory=memory, memory_kv=mkv,
+                attn_impl=attn_impl, ssm_impl=ssm_impl)
+            new_slot_caches.append(nc)
+            aux_acc = aux_acc + aux
+        return (x, aux_acc), new_slot_caches
+
+    slot_caches = caches.get("slots") if caches else None
+    mem_kv = caches.get("memory_kv") if (caches and mode == "decode") else None
+    xs = (params["slots"], slot_caches, mem_kv)
+    body_fn = jax.checkpoint(body) if remat else body
+    (x, aux_total), new_slots = jax.lax.scan(body_fn, (x, aux_total), xs)
+    new_caches["slots"] = new_slots
+    if mem_kv is not None:
+        new_caches["memory_kv"] = mem_kv
+    return x, new_caches, aux_total
+
+
+def forward_train(params, cfg: ArchConfig, tokens: jax.Array,
+                  memory: Optional[jax.Array] = None,
+                  attn_impl: str = "chunked", ssm_impl: str = "ref",
+                  remat: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """tokens (B, S) -> (logits (B, S, V) f32, aux)."""
+    x = L.embed(tokens, params["embed"])
+    if cfg.encoder_layers and memory is not None:
+        memory = encode(params, cfg, memory, attn_impl)
+    x, _, aux = _scan_blocks(params, cfg, x, mode="train", memory=memory,
+                             attn_impl=attn_impl, ssm_impl=ssm_impl,
+                             remat=remat)
+    x = _norm(cfg, x, params["final_norm"])
+    logits = _mask_padded(L.unembed(x, params["embed"]), cfg)
+    return logits, aux
+
+
+def forward_prefill(params, cfg: ArchConfig, tokens: jax.Array,
+                    caches: Dict, memory: Optional[jax.Array] = None,
+                    attn_impl: str = "chunked", ssm_impl: str = "ref"
+                    ) -> Tuple[jax.Array, Dict]:
+    """Prefill: returns (last-token logits (B, V), populated caches)."""
+    x = L.embed(tokens, params["embed"])
+    if cfg.encoder_layers and memory is not None:
+        memory = encode(params, cfg, memory, attn_impl)
+    x, new_caches, _ = _scan_blocks(params, cfg, x, mode="prefill",
+                                    caches=caches, memory=memory,
+                                    attn_impl=attn_impl, ssm_impl=ssm_impl)
+    x = _norm(cfg, x[:, -1], params["final_norm"])
+    logits = _mask_padded(L.unembed(x, params["embed"]), cfg)
+    if memory is not None:
+        new_caches["memory_kv"] = build_memory_kv(params, cfg, memory)
+    return logits, new_caches
+
+
+def forward_decode(params, cfg: ArchConfig, token: jax.Array,
+                   caches: Dict, pos: jax.Array,
+                   attn_impl: str = "xla"
+                   ) -> Tuple[jax.Array, Dict]:
+    """One decode step. token (B,), pos (B,) -> (logits (B, V), caches)."""
+    x = L.embed(token, params["embed"])
+    x, new_caches, _ = _scan_blocks(params, cfg, x, mode="decode",
+                                    caches=caches, pos=pos,
+                                    attn_impl=attn_impl)
+    x = _norm(cfg, x, params["final_norm"])
+    logits = _mask_padded(L.unembed(x, params["embed"]), cfg)
+    return logits, new_caches
+
+
+def build_memory_kv(params, cfg: ArchConfig, memory: jax.Array):
+    """Per cross-layer K/V over the (encoded) memory, stacked for scan."""
+    kinds = slot_kinds(cfg)
+    hd = cfg.resolved_head_dim
+    reps = n_scan_reps(cfg)
+
+    def one_rep(slot_params):
+        out = []
+        for j, (kind, _) in enumerate(kinds):
+            if kind == "cross":
+                out.append(A.memory_kv(slot_params[j]["mixer"]["cross"],
+                                       memory, n_kv_heads=cfg.n_kv_heads,
+                                       head_dim=hd))
+            else:
+                out.append({})
+        return out
+
+    return jax.vmap(one_rep)(params["slots"])
+
+
+# --------------------------------------------------------------------- #
+# cache init
+# --------------------------------------------------------------------- #
+def init_caches(cfg: ArchConfig, batch: int, max_seq: int,
+                memory_len: int = 0) -> Dict:
+    kinds = slot_kinds(cfg)
+    reps = n_scan_reps(cfg)
+    hd = cfg.resolved_head_dim
+
+    def one_block_cache(kind: str) -> Dict:
+        if kind in ("attn", "cross"):
+            if cfg.mla:
+                return {"kv": MLA.init_mla_cache(batch, max_seq, cfg)}
+            return {"kv": A.init_kv_cache(batch, max_seq, cfg.n_kv_heads,
+                                          hd)}
+        if kind == "mamba":
+            return {"mamba": M.init_mamba_cache(
+                batch, cfg.d_model, expand=cfg.ssm_expand,
+                state=cfg.ssm_state, conv=cfg.ssm_conv)}
+        if kind == "mlstm":
+            return {"mlstm": X.init_mlstm_cache(batch, cfg.d_model,
+                                                cfg.n_heads)}
+        if kind == "slstm":
+            return {"slstm": X.init_slstm_cache(batch, cfg.d_model,
+                                                cfg.n_heads)}
+        raise ValueError(kind)
+
+    def stack(tree):
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (reps,) + a.shape).copy(), tree)
+
+    caches: Dict[str, Any] = {
+        "slots": [stack(one_block_cache(kind)) for kind, _ in kinds]}
+    if cfg.first_layer_dense:
+        caches["first"] = one_block_cache("attn")
+    if memory_len and any(k == "cross" for k, _ in kinds):
+        mkv = {"k": jnp.zeros((batch, memory_len, cfg.n_kv_heads, hd),
+                              jnp.bfloat16),
+               "v": jnp.zeros((batch, memory_len, cfg.n_kv_heads, hd),
+                              jnp.bfloat16)}
+        caches["memory_kv"] = [
+            (jax.tree.map(lambda a: jnp.broadcast_to(
+                a, (reps,) + a.shape).copy(), mkv)
+             if kind == "cross" else {})
+            for kind, _ in kinds]
+    return caches

@@ -1,0 +1,207 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+Stabilized exponential gating (xLSTM paper, arXiv:2405.04517): gates are
+kept in log space with a stabilizer state m so the recurrence stays finite
+over 500k-token contexts:
+
+    m_t = max(log f_t + m_{t-1}, log i_t)
+    f'  = exp(log f_t + m_{t-1} - m_t),  i' = exp(log i_t - m_t)
+
+mLSTM: per-head matrix memory C (P x P), normalizer n (P,):
+    C_t = f' C + i' v k^T ;  n_t = f' n + i' k
+    h_t = C_t q / max(|n_t . q|, 1)
+
+sLSTM: per-unit scalar memory with head-wise block-diagonal recurrence.
+
+Both are O(1) state per token (sub-quadratic; they run long_500k).
+Train/prefill paths are lax.scan over time; decode is a single step.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+# --------------------------------------------------------------------- #
+# mLSTM
+# --------------------------------------------------------------------- #
+def mlstm_init(rng, d_model: int, n_heads: int, *, expand: int = 2,
+               dtype=jnp.bfloat16) -> Dict:
+    d_inner = expand * d_model
+    r = jax.random.split(rng, 7)
+    return {
+        "up": L.dense_init(r[0], d_model, 2 * d_inner, dtype),
+        "wq": L.dense_init(r[1], d_inner, d_inner, dtype),
+        "wk": L.dense_init(r[2], d_inner, d_inner, dtype),
+        "wv": L.dense_init(r[3], d_inner, d_inner, dtype),
+        "w_if": L.dense_init(r[4], d_inner, 2 * n_heads, dtype, scale=0.02),
+        "down": L.dense_init(r[5], d_inner, d_model, dtype),
+        "out_norm": L.rmsnorm_init(d_inner, dtype),
+    }
+
+
+def _mlstm_qkv(p: Dict, xg: jax.Array, n_heads: int):
+    """xg: (..., d_inner) -> q,k,v (..., H, P) + log gates (..., H)."""
+    d_inner = xg.shape[-1]
+    ph = d_inner // n_heads
+    def heads(y):
+        return y.reshape(*y.shape[:-1], n_heads, ph)
+    q = heads(xg @ p["wq"])
+    k = heads(xg @ p["wk"]) / jnp.sqrt(ph).astype(xg.dtype)
+    v = heads(xg @ p["wv"])
+    gates = (xg @ p["w_if"]).astype(jnp.float32)
+    log_i, f_pre = jnp.split(gates, 2, axis=-1)
+    log_f = jax.nn.log_sigmoid(f_pre)               # forget in (0,1)
+    return q, k, v, log_i, log_f
+
+
+def mlstm_forward(p: Dict, x: jax.Array, n_heads: int) -> jax.Array:
+    """x: (B, S, d) -> (B, S, d)."""
+    b, s, d = x.shape
+    xz = x @ p["up"]
+    xg, z = jnp.split(xz, 2, axis=-1)               # (B, S, d_inner)
+    q, k, v, log_i, log_f = _mlstm_qkv(p, xg, n_heads)
+    ph = q.shape[-1]
+
+    def step(carry, inp):
+        c, n, m = carry                              # (B,H,P,P),(B,H,P),(B,H)
+        q_t, k_t, v_t, li, lf = inp
+        m_new = jnp.maximum(lf + m, li)
+        fp = jnp.exp(lf + m - m_new)[..., None]      # (B,H,1)
+        ip = jnp.exp(li - m_new)[..., None]
+        kf = k_t.astype(jnp.float32)
+        vf = v_t.astype(jnp.float32)
+        c = c * fp[..., None] + ip[..., None] * vf[..., :, None] \
+            * kf[..., None, :]                       # (B,H,P,P) v k^T
+        n = n * fp + ip * kf
+        qf = q_t.astype(jnp.float32)
+        num = jnp.einsum("bhvk,bhk->bhv", c, qf)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qf)),
+                          1.0)[..., None]
+        h = (num / den)
+        return (c, n, m_new), h.astype(x.dtype)
+
+    c0 = jnp.zeros((b, n_heads, ph, ph), jnp.float32)
+    n0 = jnp.zeros((b, n_heads, ph), jnp.float32)
+    m0 = jnp.full((b, n_heads), -1e30, jnp.float32)
+    xs = (q.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+          v.transpose(1, 0, 2, 3), log_i.transpose(1, 0, 2),
+          log_f.transpose(1, 0, 2))
+    _, hs = L.chunked_remat_scan(step, (c0, n0, m0), xs, chunk=128)
+    h = hs.transpose(1, 0, 2, 3).reshape(b, s, -1)   # (B, S, d_inner)
+    h = L.rmsnorm(h, p["out_norm"])
+    h = h * jax.nn.silu(z)
+    return h @ p["down"]
+
+
+def init_mlstm_cache(batch: int, d_model: int, n_heads: int, *,
+                     expand: int = 2) -> Dict:
+    d_inner = expand * d_model
+    ph = d_inner // n_heads
+    return {
+        "c": jnp.zeros((batch, n_heads, ph, ph), jnp.float32),
+        "n": jnp.zeros((batch, n_heads, ph), jnp.float32),
+        "m": jnp.full((batch, n_heads), -1e30, jnp.float32),
+    }
+
+
+def mlstm_decode(p: Dict, x: jax.Array, cache: Dict, n_heads: int
+                 ) -> Tuple[jax.Array, Dict]:
+    """x: (B, d) one token."""
+    xz = x @ p["up"]
+    xg, z = jnp.split(xz, 2, axis=-1)
+    q, k, v, log_i, log_f = _mlstm_qkv(p, xg, n_heads)
+    c, n, m = cache["c"], cache["n"], cache["m"]
+    m_new = jnp.maximum(log_f + m, log_i)
+    fp = jnp.exp(log_f + m - m_new)[..., None]
+    ip = jnp.exp(log_i - m_new)[..., None]
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    c = c * fp[..., None] + ip[..., None] * vf[..., :, None] \
+        * kf[..., None, :]
+    n = n * fp + ip * kf
+    qf = q.astype(jnp.float32)
+    num = jnp.einsum("bhvk,bhk->bhv", c, qf)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qf)),
+                      1.0)[..., None]
+    h = (num / den).reshape(x.shape[0], -1).astype(x.dtype)
+    h = L.rmsnorm(h, p["out_norm"])
+    h = h * jax.nn.silu(z)
+    return h @ p["down"], {"c": c, "n": n, "m": m_new}
+
+
+# --------------------------------------------------------------------- #
+# sLSTM
+# --------------------------------------------------------------------- #
+def slstm_init(rng, d_model: int, n_heads: int, dtype=jnp.bfloat16) -> Dict:
+    r = jax.random.split(rng, 3)
+    ph = d_model // n_heads
+    rec = (jax.random.normal(r[1], (n_heads, ph, 4 * ph), jnp.float32)
+           / jnp.sqrt(ph)).astype(dtype)
+    return {
+        # input projection -> (z, i, f, o) pre-activations
+        "w_in": L.dense_init(r[0], d_model, 4 * d_model, dtype),
+        "r_rec": rec,                       # block-diagonal recurrence
+        "out": L.dense_init(r[2], d_model, d_model, dtype),
+    }
+
+
+def _slstm_step(p: Dict, x_t, carry, n_heads: int):
+    """x_t: (B, d); carry: (c, n, m, h_prev) with c/n/h (B, d), m (B, H)."""
+    c, n, m, h_prev = carry
+    b, d = x_t.shape
+    ph = d // n_heads
+    pre = x_t @ p["w_in"]                            # (B, 4d)
+    hp = h_prev.reshape(b, n_heads, ph)
+    rec = jnp.einsum("bhp,hpq->bhq", hp.astype(p["r_rec"].dtype),
+                     p["r_rec"]).reshape(b, 4 * d)
+    pre = (pre + rec).astype(jnp.float32)
+    z, i_pre, f_pre, o_pre = jnp.split(pre, 4, axis=-1)   # (B, d) each
+    zh = jnp.tanh(z)
+    # stabilized exponential gating per head (shared m across the head)
+    li = i_pre.reshape(b, n_heads, ph)
+    lf = jax.nn.log_sigmoid(f_pre).reshape(b, n_heads, ph)
+    m_new = jnp.maximum(jnp.max(lf, -1) + m, jnp.max(li, -1))   # (B, H)
+    fp = jnp.exp(lf + m[..., None] - m_new[..., None])
+    ip = jnp.exp(li - m_new[..., None])
+    cf = c.reshape(b, n_heads, ph) * fp + ip * zh.reshape(b, n_heads, ph)
+    nf = n.reshape(b, n_heads, ph) * fp + ip
+    h = jax.nn.sigmoid(o_pre) * (cf / jnp.maximum(nf, 1e-6)
+                                 ).reshape(b, d)
+    return (cf.reshape(b, d), nf.reshape(b, d), m_new, h.astype(x_t.dtype))
+
+
+def slstm_forward(p: Dict, x: jax.Array, n_heads: int) -> jax.Array:
+    b, s, d = x.shape
+
+    def step(carry, x_t):
+        new = _slstm_step(p, x_t, carry, n_heads)
+        return new, new[3]
+
+    carry = init_slstm_cache(b, d, n_heads)
+    carry = (carry["c"], carry["n"], carry["m"], carry["h"])
+    _, hs = L.chunked_remat_scan(step, carry, x.transpose(1, 0, 2),
+                                 chunk=128)
+    return hs.transpose(1, 0, 2) @ p["out"]
+
+
+def init_slstm_cache(batch: int, d_model: int, n_heads: int) -> Dict:
+    return {
+        "c": jnp.zeros((batch, d_model), jnp.float32),
+        "n": jnp.zeros((batch, d_model), jnp.float32),
+        "m": jnp.full((batch, n_heads), -1e30, jnp.float32),
+        "h": jnp.zeros((batch, d_model), jnp.bfloat16),
+    }
+
+
+def slstm_decode(p: Dict, x: jax.Array, cache: Dict, n_heads: int
+                 ) -> Tuple[jax.Array, Dict]:
+    carry = (cache["c"], cache["n"], cache["m"], cache["h"])
+    c, n, m, h = _slstm_step(p, x, carry, n_heads)
+    out = h @ p["out"]
+    return out, {"c": c, "n": n, "m": m, "h": h}

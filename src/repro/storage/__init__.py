@@ -1,0 +1,14 @@
+"""Zoned storage stack: ZenFS-like filesystem + LSM traffic generator.
+
+This is the host side of the paper: data systems (RocksDB+ZenFS, or this
+framework's checkpoint manager) place files with lifetime hints onto zones,
+decide when to FINISH (threshold policy), and garbage-collect zones whose
+data is fully invalidated.  The SA <-> DLWA trade-off of paper Fig. 1/7b
+lives here.
+"""
+
+from repro.storage.zonefs import ZoneFS, FSStats
+from repro.storage.lsm import KVBenchConfig, LSMSimulator, kvbench_mix
+
+__all__ = ["ZoneFS", "FSStats", "KVBenchConfig", "LSMSimulator",
+           "kvbench_mix"]

@@ -1,0 +1,1 @@
+"""Training substrate: optimizer, grad machinery, loop, checkpointing."""

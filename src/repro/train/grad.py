@@ -1,0 +1,133 @@
+"""Distributed-gradient machinery: microbatching, compression, hierarchy.
+
+Three building blocks used by the loop and by the §Perf hillclimbs:
+
+* **Gradient accumulation** -- ``accumulate_grads`` scans microbatches so
+  the global batch fits memory; grads are averaged in f32.
+* **Int8 gradient compression with error feedback** -- per-leaf symmetric
+  quantization; the quantization error is carried in an f32 residual and
+  re-added next step (Seide et al. / 1-bit-SGD lineage).  Under pjit the
+  all-reduce then moves int8, cutting cross-pod DCI bytes 4x vs f32.
+* **Pod-hierarchical all-reduce** -- shard_map reduce-scatter over the
+  in-pod axis, all-reduce over the pod axis, all-gather in-pod: the
+  standard two-level schedule that keeps slow cross-pod links carrying
+  1/|data| of the bytes.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+# --------------------------------------------------------------------- #
+# microbatch accumulation
+# --------------------------------------------------------------------- #
+def accumulate_grads(loss_fn: Callable, params: Any, batch: Dict,
+                     n_micro: int) -> Tuple[jax.Array, Any, Dict]:
+    """Split the leading batch dim into ``n_micro`` microbatches and scan.
+
+    loss_fn(params, batch) -> (loss, metrics_dict).
+    Returns (mean loss, mean grads, last metrics).
+    """
+    if n_micro <= 1:
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        return loss, grads, metrics
+
+    def reshape(x):
+        if x.shape[0] == n_micro:
+            return x                     # caller pre-shaped (M, Bm, ...)
+        b = x.shape[0]
+        if b % n_micro:
+            raise ValueError(f"batch {b} % n_micro {n_micro} != 0")
+        return x.reshape(n_micro, b // n_micro, *x.shape[1:])
+
+    micro = jax.tree.map(reshape, batch)
+    zero_g = jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def body(carry, mb):
+        loss_acc, g_acc = carry
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, mb)
+        g_acc = jax.tree.map(
+            lambda a, g: a + g.astype(jnp.float32) / n_micro, g_acc, grads)
+        return (loss_acc + loss / n_micro, g_acc), metrics
+
+    (loss, grads), metrics = jax.lax.scan(body, (0.0, zero_g), micro)
+    last_metrics = jax.tree.map(lambda m: m[-1], metrics)
+    return loss, grads, last_metrics
+
+
+# --------------------------------------------------------------------- #
+# int8 compression with error feedback
+# --------------------------------------------------------------------- #
+def compress_int8(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8 quantization. Returns (q, scale)."""
+    gf = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def init_error_feedback(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_grads_ef(grads: Any, ef: Any) -> Tuple[Any, Any]:
+    """Quantize (grads + residual); new residual = input - dequantized.
+
+    Returns (dequantized grads to feed the optimizer, new residual).
+    The communication layer sees only the int8 payloads.
+    """
+    def one(g, e):
+        target = g.astype(jnp.float32) + e
+        q, scale = compress_int8(target)
+        deq = decompress_int8(q, scale)
+        return deq, target - deq
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(ef)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (tdef.unflatten([o[0] for o in outs]),
+            tdef.unflatten([o[1] for o in outs]))
+
+
+# --------------------------------------------------------------------- #
+# pod-hierarchical all-reduce (shard_map)
+# --------------------------------------------------------------------- #
+def hierarchical_psum(x: jax.Array, *, in_pod_axis: str = "data",
+                      cross_pod_axis: str = "pod") -> jax.Array:
+    """reduce_scatter(in-pod) -> psum(cross-pod) -> all_gather(in-pod).
+
+    Call inside shard_map.  Equivalent to psum over both axes but the
+    cross-pod (DCI) hop carries 1/|in_pod| of the bytes.
+    """
+    scattered = jax.lax.psum_scatter(x, in_pod_axis, scatter_dimension=0,
+                                     tiled=True)
+    reduced = jax.lax.psum(scattered, cross_pod_axis)
+    return jax.lax.all_gather(reduced, in_pod_axis, axis=0, tiled=True)
+
+
+def make_hierarchical_grad_sync(mesh, axes=("pod", "data")):
+    """shard_map'd gradient synchronizer for manual-DP training loops."""
+    from jax.experimental.shard_map import shard_map
+
+    def sync(grads):
+        def inner(g):
+            return jax.tree.map(
+                lambda a: hierarchical_psum(
+                    a, in_pod_axis=axes[1], cross_pod_axis=axes[0]) /
+                (mesh.shape[axes[0]] * mesh.shape[axes[1]]), g)
+        return shard_map(inner, mesh=mesh,
+                         in_specs=P(), out_specs=P())(grads)
+    return sync

@@ -1,0 +1,87 @@
+"""AdamW + schedules, pure JAX over pytrees (no external deps).
+
+Optimizer state is kept in f32 regardless of (bf16) param dtype; update
+math runs in f32 and casts back -- the standard mixed-precision recipe.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup -> cosine decay to min_lr_ratio."""
+    warm = jnp.minimum(1.0, (step + 1) / max(1, cfg.warmup_steps))
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    frac = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos
+    return cfg.lr * warm * frac
+
+
+def init(params: Any) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                      nu=jax.tree.map(jnp.copy, zeros))
+
+
+def global_norm(tree: Any) -> jax.Array:
+    sq = jax.tree.map(lambda g: jnp.sum(g.astype(jnp.float32) ** 2), tree)
+    return jnp.sqrt(sum(jax.tree.leaves(sq)))
+
+
+def update(cfg: AdamWConfig, params: Any, grads: Any, state: AdamWState
+           ) -> Tuple[Any, AdamWState, dict]:
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    lr = schedule(cfg, state.step)
+    b1, b2 = cfg.b1, cfg.b2
+    step = state.step + 1
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * clip
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * g * g
+        mhat = mu / bc1
+        nhat = nu / bc2
+        delta = mhat / (jnp.sqrt(nhat) + cfg.eps)
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * (delta + cfg.weight_decay * pf)
+        return pf.astype(p.dtype), mu, nu
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_mu = tdef.flatten_up_to(state.mu)
+    flat_nu = tdef.flatten_up_to(state.nu)
+    out = [upd(p, g, m, n)
+           for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_mu = tdef.unflatten([o[1] for o in out])
+    new_nu = tdef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(step, new_mu, new_nu), {
+        "grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,137 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, asserting output shapes + finiteness (no NaNs), plus a serving
+prefill->decode consistency check for each family."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch, list_archs
+from repro.models import model as MDL
+from repro.models import transformer as T
+from repro.train import optimizer as OPT
+
+ARCHS = list(list_archs())
+RNG = np.random.default_rng(0)
+
+
+def make_batch(cfg, b=2, s=16):
+    tokens = jnp.asarray(RNG.integers(0, cfg.vocab, (b, s)), jnp.int32)
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.family in ("vlm", "audio"):
+        m = 8
+        batch["memory"] = jnp.asarray(
+            RNG.standard_normal((b, m, cfg.d_model)) * 0.1, jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_finite(arch):
+    cfg = get_arch(arch).reduced()
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    batch = make_batch(cfg)
+    logits, aux = T.forward_train(params, cfg, batch["tokens"],
+                                  memory=batch.get("memory"))
+    assert logits.shape == (*batch["tokens"].shape, cfg.padded_vocab)
+    # padding tail is masked to -inf
+    if cfg.padded_vocab > cfg.vocab:
+        assert bool((logits[..., cfg.vocab:] < -1e29).all())
+    assert logits.dtype == jnp.float32
+    assert bool(jnp.isfinite(logits[..., :cfg.vocab]).all())
+    loss, metrics = MDL.loss_fn(params, cfg, batch)
+    assert np.isfinite(float(loss))
+    # one optimizer step moves parameters and keeps loss finite
+    ts = MDL.make_train_step(cfg, OPT.AdamWConfig(total_steps=4))
+    p2, _, m = ts(params, OPT.init(params), batch)
+    assert np.isfinite(float(m["loss"]))
+    moved = jax.tree.map(
+        lambda a, b_: bool(jnp.any(a.astype(jnp.float32)
+                                   != b_.astype(jnp.float32))), params, p2)
+    assert any(jax.tree.leaves(moved))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_then_decode_matches_train_logits(arch):
+    """Serving path correctness: prefill over s tokens then one decode step
+    must reproduce the train-forward logits of the next position."""
+    cfg = get_arch(arch).reduced()
+    params = T.init_params(jax.random.PRNGKey(1), cfg)
+    b, s = 2, 12
+    batch = make_batch(cfg, b, s + 1)
+    tokens = batch["tokens"]
+    memory = batch.get("memory")
+    max_seq = 32
+
+    caches = T.init_caches(cfg, b, max_seq,
+                           memory_len=memory.shape[1] if memory is not None
+                           else 0)
+    logits_p, caches = T.forward_prefill(params, cfg, tokens[:, :s],
+                                         caches, memory=memory)
+    assert logits_p.shape == (b, cfg.padded_vocab)
+
+    # full-forward reference for position s-1 (predicting token s)
+    logits_full, _ = T.forward_train(params, cfg, tokens[:, :s + 1],
+                                     memory=memory)
+    ref = logits_full[:, s - 1]
+    err = float(jnp.max(jnp.abs(logits_p - ref))
+                / (jnp.max(jnp.abs(ref)) + 1e-9))
+    families_with_state_prefill = ("ssm", "hybrid")
+    if cfg.family not in families_with_state_prefill:
+        assert err < 5e-2, f"prefill/train mismatch: {err}"
+
+        # decode one step: feed token s, expect logits for position s
+        pos = jnp.full((b,), s, jnp.int32)
+        logits_d, caches = T.forward_decode(params, cfg, tokens[:, s],
+                                            caches, pos)
+        ref_d = logits_full[:, s]
+        err_d = float(jnp.max(jnp.abs(logits_d - ref_d))
+                      / (jnp.max(jnp.abs(ref_d)) + 1e-9))
+        assert err_d < 5e-2, f"decode/train mismatch: {err_d}"
+    else:
+        # recurrent-state archs: prefill is shape-correct; step-by-step
+        # decode from scratch must match the train forward
+        caches2 = T.init_caches(cfg, b, max_seq,
+                                memory_len=memory.shape[1]
+                                if memory is not None else 0)
+        for i in range(4):
+            pos = jnp.full((b,), i, jnp.int32)
+            logits_d, caches2 = T.forward_decode(params, cfg,
+                                                 tokens[:, i], caches2, pos)
+        ref_d = logits_full[:, 3]
+        err_d = float(jnp.max(jnp.abs(logits_d - ref_d))
+                      / (jnp.max(jnp.abs(ref_d)) + 1e-9))
+        assert err_d < 5e-2, f"recurrent decode/train mismatch: {err_d}"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_input_specs_cover_all_cells(arch):
+    from repro.configs.base import SHAPES
+    cfg = get_arch(arch)
+    for name, cell in SHAPES.items():
+        if name == "long_500k" and not cfg.sub_quadratic:
+            continue
+        specs = MDL.input_specs(cfg, cell)
+        leaves = jax.tree.leaves(specs)
+        assert leaves, (arch, name)
+        for leaf in leaves:
+            assert isinstance(leaf, jax.ShapeDtypeStruct)
+
+
+def test_param_counts_match_scale():
+    """Full-config parameter counts are in the advertised ballpark."""
+    expected = {
+        "codeqwen1.5-7b": (6e9, 9e9),
+        "phi3-mini-3.8b": (3e9, 4.6e9),
+        "minitron-8b": (6e9, 10e9),   # assignment config (GQA kv=8) gives 6.7B
+        "granite-3-8b": (7e9, 10e9),
+        "llama4-scout-17b-a16e": (90e9, 120e9),
+        "deepseek-v2-236b": (200e9, 260e9),
+        "llama-3.2-vision-11b": (8e9, 13e9),
+        "xlstm-125m": (0.09e9, 0.2e9),
+        "jamba-1.5-large-398b": (330e9, 420e9),
+        "seamless-m4t-medium": (0.5e9, 1.6e9),  # backbone only; frontend is a stub
+    }
+    for arch, (lo, hi) in expected.items():
+        n = MDL.param_count(get_arch(arch))
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B not in [{lo/1e9}, {hi/1e9}]"

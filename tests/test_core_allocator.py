@@ -1,0 +1,114 @@
+"""Allocator correctness: vectorized JAX path vs exact ILP dynamic program."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import alloc_exact, allocator
+
+
+def _random_instance(rng, n_groups, per_group):
+    n = n_groups * per_group
+    wear = rng.integers(0, 50, size=n).astype(np.int64)
+    avail = rng.choice([0, 1, 2, 3], size=n, p=[0.4, 0.15, 0.15, 0.3])
+    group = np.repeat(np.arange(n_groups), per_group).astype(np.int32)
+    return wear, avail, group
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(2, 6), st.integers(3, 12),
+       st.integers(1, 3))
+def test_even_split_matches_exact_dp(seed, n_groups, per_group, take):
+    """Balanced ILP (K=take, L_min=all eligible): the vectorized per-group
+    top-`take` selection must equal the exact DP optimum cost."""
+    rng = np.random.default_rng(seed)
+    wear, avail, group = _random_instance(rng, n_groups, per_group)
+    eligible_idx = list(range(n_groups))
+    z = take * n_groups
+
+    dp = alloc_exact.solve(wear, avail, group, z=z, k_max=take,
+                           l_min=n_groups, eligible_groups=eligible_idx)
+    even = alloc_exact.solve_even(wear, avail, group, take_per_group=take,
+                                  eligible_groups=eligible_idx)
+    sel, feasible = allocator.allocate(
+        wear.reshape(n_groups, per_group),
+        avail.reshape(n_groups, per_group),
+        np.ones(n_groups, dtype=bool), take)
+
+    assert feasible == dp.feasible == even.feasible
+    if not feasible:
+        return
+    fast_cost = float(wear.reshape(n_groups, per_group)[sel].sum())
+    assert fast_cost == pytest.approx(dp.cost)
+    assert even.cost == pytest.approx(dp.cost)
+    # per-group counts respected
+    assert (sel.sum(axis=1) == take).all()
+    # only allocatable slots selected
+    av2 = avail.reshape(n_groups, per_group)
+    assert np.isin(av2[sel], alloc_exact.ALLOCATABLE).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(3, 6), st.integers(4, 10))
+def test_general_dp_constraints(seed, n_groups, per_group):
+    """The general DP respects Z / K / L_min and never beats brute force
+    on tiny instances."""
+    rng = np.random.default_rng(seed)
+    wear, avail, group = _random_instance(rng, n_groups, per_group)
+    z, k_max, l_min = 4, 3, 2
+    sol = alloc_exact.solve(wear, avail, group, z=z, k_max=k_max,
+                            l_min=l_min, eligible_groups=range(n_groups))
+    if not sol.feasible:
+        return
+    assert len(sol.selected) == z
+    counts = np.bincount(group[sol.selected], minlength=n_groups)
+    assert (counts <= k_max).all()
+    assert (counts > 0).sum() >= l_min
+    assert np.isin(avail[sol.selected], alloc_exact.ALLOCATABLE).all()
+    assert sol.cost == pytest.approx(wear[sol.selected].sum())
+
+    # brute force over all z-subsets for very small n
+    n = len(wear)
+    if n <= 14:
+        import itertools
+        best = np.inf
+        ok_ids = [i for i in range(n) if avail[i] in alloc_exact.ALLOCATABLE]
+        for comb in itertools.combinations(ok_ids, z):
+            c = np.bincount(group[list(comb)], minlength=n_groups)
+            if (c <= k_max).all() and (c > 0).sum() >= l_min:
+                best = min(best, wear[list(comb)].sum())
+        assert sol.cost == pytest.approx(best)
+
+
+def test_round_robin_windows_disjoint():
+    rr = allocator.RoundRobin(n_groups=8, span=4)
+    w1, w2 = rr.next_window(), rr.next_window()
+    assert not (w1 & w2).any()
+    assert (w1 | w2).all()
+    w3 = rr.next_window()
+    assert (w3 == w1).all()  # wraps around
+
+
+def test_eligibility_excludes_groups():
+    wear = np.zeros((4, 4), np.int64)
+    avail = np.zeros((4, 4), np.int32)
+    eligible = np.array([True, False, True, False])
+    sel, feasible = allocator.allocate(wear, avail, eligible, take=2)
+    assert feasible
+    assert sel[1].sum() == 0 and sel[3].sum() == 0
+    assert sel[0].sum() == 2 and sel[2].sum() == 2
+
+
+def test_prefers_low_wear():
+    wear = np.array([[5, 1, 3, 2]], np.int64)
+    avail = np.zeros((1, 4), np.int32)
+    sel, _ = allocator.allocate(wear, avail, np.array([True]), take=2)
+    assert sel[0].tolist() == [False, True, False, True]
+
+
+def test_unavailable_never_selected():
+    wear = np.array([[0, 0, 9, 9]], np.int64)
+    avail = np.array([[2, 1, 0, 3]], np.int32)  # only codes 0/3 allocatable
+    sel, feasible = allocator.allocate(wear, avail, np.array([True]), take=2)
+    assert feasible
+    assert sel[0].tolist() == [False, False, True, True]

@@ -1,0 +1,254 @@
+"""Zone state-machine invariants + the paper's headline numbers."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (BLOCK, FIXED, SUPERBLOCK, ZNSDevice, ZoneGeometry,
+                        ZoneState, custom16, hchunk, vchunk, zn540)
+from repro.core import workloads
+from repro.core.alloc_exact import (AVAIL_ALLOCATED, AVAIL_FREE,
+                                    AVAIL_INVALID, AVAIL_VALID)
+
+
+def tiny_flash():
+    from repro.core.geometry import FlashGeometry
+    return FlashGeometry(n_channels=4, ways_per_channel=1, blocks_per_lun=8,
+                         pages_per_block=4, page_bytes=4096)
+
+
+# --------------------------------------------------------------------- #
+# paper headline numbers
+# --------------------------------------------------------------------- #
+def test_paper_dlwa_86pct_reduction_at_10pct_occupancy():
+    """§6.2: 'reducing DLWA by up to 86.36% (10% zone occupancy with the
+    superblock configuration)' on the ZN540 model."""
+    flash, zone = zn540()
+    base = ZNSDevice(flash, zone, FIXED)
+    silent = ZNSDevice(flash, zone, SUPERBLOCK)
+    rb = workloads.dlwa_benchmark(base, occupancy=0.10, n_zones=4)
+    rs = workloads.dlwa_benchmark(silent, occupancy=0.10, n_zones=4)
+    reduction = (rb["dlwa"] - rs["dlwa"]) / rb["dlwa"]
+    assert rb["dlwa"] == pytest.approx(10.0, rel=0.01)
+    assert reduction == pytest.approx(0.8636, abs=0.01)
+
+
+def test_paper_dlwa_1_at_50pct_multisegment():
+    """§6.3: at 50% occupancy, multi-segment zones eliminate dummy writes
+    entirely under SilentZNS (DLWA = 1)."""
+    flash = custom16()
+    zone = ZoneGeometry(parallelism=16, n_segments=2)
+    for spec in (BLOCK, vchunk(2), vchunk(4), SUPERBLOCK):
+        dev = ZNSDevice(flash, zone, spec)
+        r = workloads.dlwa_benchmark(dev, occupancy=0.5, n_zones=2)
+        assert r["dlwa"] == pytest.approx(1.0), spec.name
+    base = ZNSDevice(flash, zone, FIXED)
+    r = workloads.dlwa_benchmark(base, occupancy=0.5, n_zones=2)
+    assert r["dlwa"] == pytest.approx(2.0)
+
+
+def test_paper_fig8_small_zone_scaling():
+    """Fig. 8: at ~0 occupancy, halving zone size halves fixed-allocation
+    dummy writes (256 -> 128 -> 64 -> 32 MiB)."""
+    flash = custom16()
+    dummy = {}
+    for P, segs in ((16, 2), (16, 1), (8, 1), (4, 1)):
+        zone = ZoneGeometry(parallelism=P, n_segments=segs)
+        dev = ZNSDevice(flash, zone, FIXED)
+        r = workloads.dlwa_benchmark(dev, occupancy=0.0001, n_zones=2)
+        dummy[(P, segs)] = r["dummy_pages_per_zone"]
+    assert dummy[(16, 2)] / dummy[(16, 1)] == pytest.approx(2.0, rel=0.01)
+    assert dummy[(16, 1)] / dummy[(8, 1)] == pytest.approx(2.0, rel=0.01)
+    assert dummy[(8, 1)] / dummy[(4, 1)] == pytest.approx(2.0, rel=0.01)
+
+
+def test_paper_fig8_element_granularity_ladder():
+    """Fig. 8 (P8,S128 @ 0.01%): block < vchunk2/4 < hchunk2 < fixed, with
+    vchunk ~4x less than fixed."""
+    flash = custom16()
+    zone = ZoneGeometry(parallelism=8, n_segments=2)
+    res = {}
+    for spec in (FIXED, BLOCK, vchunk(2), vchunk(4), hchunk(2)):
+        dev = ZNSDevice(flash, zone, spec)
+        r = workloads.dlwa_benchmark(dev, occupancy=0.0001, n_zones=2)
+        res[spec.name] = r["dummy_pages_per_zone"]
+    assert res["block"] < res["vchunk2"] <= res["vchunk4"]
+    assert res["vchunk4"] < res["hchunk2"] < res["fixed"]
+    assert res["fixed"] / res["vchunk2"] == pytest.approx(4.0, rel=0.05)
+
+
+def test_paper_fig9_parallelism_throughput():
+    """Fig. 9: P16 saturates with 1 zone; P8 needs 2; P4 needs 4."""
+    flash = custom16()
+    bw = {}
+    for P, jobs in ((16, 1), (8, 1), (8, 2), (4, 1), (4, 4)):
+        zone = ZoneGeometry(parallelism=P, n_segments=1)
+        dev = ZNSDevice(flash, zone, FIXED)
+        r = workloads.write_benchmark(dev, request_kib=64, n_jobs=jobs,
+                                      mib_per_job=8)
+        bw[(P, jobs)] = r["bandwidth_mib_s"]
+    assert bw[(16, 1)] == pytest.approx(119, rel=0.1)   # ~110 MiB/s peak
+    assert bw[(8, 1)] == pytest.approx(60, rel=0.1)     # ~60 MiB/s
+    assert bw[(8, 2)] == pytest.approx(bw[(16, 1)], rel=0.1)
+    assert bw[(4, 1)] == pytest.approx(30, rel=0.1)     # ~30 MiB/s
+    assert bw[(4, 4)] == pytest.approx(bw[(16, 1)], rel=0.15)
+
+
+def test_paper_interference_fine_grained_lower():
+    """Table 3: fine-grained elements cut FINISH interference on
+    multi-segment zones; single-segment zones behave like fixed."""
+    flash = custom16()
+    multi = ZoneGeometry(parallelism=16, n_segments=2)
+    res = {}
+    for spec in (FIXED, BLOCK, vchunk(2)):
+        dev = ZNSDevice(flash, multi, spec, max_active=32)
+        r = workloads.interference_benchmark(dev, concurrency=4)
+        res[spec.name] = r["interference"]
+    assert res["block"] < res["fixed"]
+    assert res["vchunk2"] < res["fixed"]
+    # single segment: all schemes must pad the whole segment -> similar
+    single = ZoneGeometry(parallelism=16, n_segments=1)
+    vals = []
+    for spec in (FIXED, BLOCK):
+        dev = ZNSDevice(flash, single, spec, max_active=32)
+        r = workloads.interference_benchmark(dev, concurrency=4)
+        vals.append(r["interference"])
+    assert vals[0] == pytest.approx(vals[1], rel=0.05)
+
+
+def test_wear_leveling_beats_baseline():
+    """Fig. 7c: SilentZNS spreads erases more evenly than the wear-
+    oblivious baseline under repeated partial-fill churn."""
+    flash, zone = zn540()
+    def churn(dev, rounds=30):
+        for i in range(rounds):
+            z = i % 8
+            dev.zone_write(z, dev.zone_pages // 10)
+            dev.zone_finish(z)
+            dev.zone_reset(z)
+    base = ZNSDevice(flash, zone, FIXED, wear_aware=False)
+    silent = ZNSDevice(flash, zone, SUPERBLOCK)
+    churn(base); churn(silent)
+    base_total = base.block_erases + base.pending_erases()
+    silent_total = silent.block_erases + silent.pending_erases()
+    assert silent_total < base_total  # fewer erases overall (less padding)
+    bw, sw = base.block_wear(), silent.block_wear()
+    # SilentZNS: only-touched elements wear; baseline erases whole zones
+    assert sw.sum() <= bw.sum()
+
+
+# --------------------------------------------------------------------- #
+# state-machine invariants
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("spec", [BLOCK, vchunk(2), SUPERBLOCK, FIXED],
+                         ids=lambda s: s.name)
+def test_finish_releases_untouched_elements(spec):
+    flash = tiny_flash()
+    zone = ZoneGeometry(parallelism=4, n_segments=2)
+    dev = ZNSDevice(flash, zone, spec)
+    dev.zone_write(0, 3)  # 3 pages into a 32-page zone
+    n_allocated = int((dev.elem_avail == AVAIL_ALLOCATED).sum()
+                      + (dev.elem_avail == AVAIL_VALID).sum())
+    dev.zone_finish(0)
+    mapped = dev.zones[0].elements
+    kept = int((mapped >= 0).sum())
+    if spec is FIXED:
+        assert kept == 1  # fixed cannot release anything
+    else:
+        assert kept < n_allocated  # something was released
+    # released elements are FREE again
+    assert not (dev.elem_avail == AVAIL_ALLOCATED).any()
+
+
+@pytest.mark.parametrize("spec", [BLOCK, vchunk(2), SUPERBLOCK],
+                         ids=lambda s: s.name)
+def test_released_elements_are_reallocated(spec):
+    flash = tiny_flash()
+    zone = ZoneGeometry(parallelism=4, n_segments=2)
+    dev = ZNSDevice(flash, zone, spec)
+    dev.zone_write(0, 3)
+    dev.zone_finish(0)
+    free_before = int((dev.elem_avail == AVAIL_FREE).sum())
+    dev.zone_write(1, 3)  # must be able to reuse released elements
+    assert int((dev.elem_avail == AVAIL_FREE).sum()) < free_before
+
+
+def test_reset_defers_erase_to_reallocation():
+    flash = tiny_flash()
+    zone = ZoneGeometry(parallelism=4, n_segments=1)
+    dev = ZNSDevice(flash, zone, BLOCK)
+    dev.zone_write(0, dev.zone_pages)  # full zone, no padding
+    assert dev.block_erases == 0
+    dev.zone_reset(0)
+    assert dev.block_erases == 0          # async: metadata only
+    assert (dev.elem_avail == AVAIL_INVALID).sum() == 4
+    wear_before = dev.elem_wear.sum()
+    # cycle through zones until invalid elements are re-allocated
+    for z in range(1, dev.n_zones):
+        dev.zone_write(z, dev.zone_pages)
+    dev.zone_write(0, 1)  # forces reuse of reset elements -> erase now
+    assert dev.block_erases > 0
+    assert dev.elem_wear.sum() > wear_before
+
+
+def test_dlwa_accounting_identity():
+    flash = tiny_flash()
+    zone = ZoneGeometry(parallelism=4, n_segments=2)
+    dev = ZNSDevice(flash, zone, vchunk(2))
+    dev.zone_write(0, 5)
+    dev.zone_finish(0)
+    # pages in mapped elements == host + dummy
+    mapped = dev.elem_zone >= 0
+    assert dev.elem_pages[mapped].sum() == dev.host_pages + dev.dummy_pages
+
+
+def test_full_zone_write_has_no_padding():
+    flash = tiny_flash()
+    zone = ZoneGeometry(parallelism=4, n_segments=2)
+    for spec in (FIXED, BLOCK, SUPERBLOCK, vchunk(2), hchunk(2)):
+        dev = ZNSDevice(flash, zone, spec)
+        dev.zone_write(0, dev.zone_pages)
+        dev.zone_finish(0)
+        assert dev.dummy_pages == 0, spec.name
+        assert dev.zones[0].state is ZoneState.FULL
+
+
+def test_open_zone_limit_enforced():
+    flash = tiny_flash()
+    zone = ZoneGeometry(parallelism=4, n_segments=1)
+    dev = ZNSDevice(flash, zone, BLOCK, max_active=2)
+    dev.zone_write(0, 1)
+    dev.zone_write(1, 1)
+    with pytest.raises(RuntimeError, match="active zone limit"):
+        dev.zone_write(2, 1)
+    dev.zone_finish(0)  # frees a slot
+    dev.zone_write(2, 1)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 31))
+def test_property_random_fill_finish_reset_cycle(seed, pages):
+    """Arbitrary partial fills: accounting identities always hold."""
+    rng = np.random.default_rng(seed)
+    flash = tiny_flash()
+    zone = ZoneGeometry(parallelism=4, n_segments=2)
+    spec = [BLOCK, vchunk(2), hchunk(2), SUPERBLOCK][seed % 4]
+    dev = ZNSDevice(flash, zone, spec)
+    for rnd in range(3):
+        z = rnd
+        n = min(pages + rnd, dev.zone_pages)
+        dev.zone_write(z, n)
+        dev.zone_finish(z)
+        # every mapped element of a FULL zone is completely written
+        info = dev.zones[z]
+        for eid in info.elements:
+            if eid >= 0:
+                assert dev.elem_pages[eid] == dev.layout.pages_per_element
+                assert dev.elem_avail[eid] == AVAIL_VALID
+        dev.zone_reset(z)
+        assert not (dev.elem_zone == z).any()
+    # wear never decreases, avail codes in range
+    assert (dev.elem_wear >= 0).all()
+    assert np.isin(dev.elem_avail,
+                   [AVAIL_FREE, AVAIL_ALLOCATED, AVAIL_VALID,
+                    AVAIL_INVALID]).all()

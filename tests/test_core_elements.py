@@ -1,0 +1,111 @@
+"""Element-layout invariants: every layout partitions the device's blocks."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (BLOCK, FIXED, SUPERBLOCK, ZoneGeometry, build_layout,
+                        custom16, elements_per_zone, groups_per_zone,
+                        hchunk, is_applicable, vchunk, zn540)
+from repro.core.elements import ElementKind
+from repro.core.geometry import FlashGeometry
+
+SPECS = [BLOCK, hchunk(2), vchunk(2), vchunk(4), SUPERBLOCK]
+
+
+@pytest.mark.parametrize("spec", SPECS, ids=lambda s: s.name)
+def test_layout_partitions_blocks(spec):
+    flash = custom16()
+    lay = build_layout(flash, spec)
+    blocks = lay.blocks.reshape(-1)
+    assert len(blocks) == flash.n_blocks
+    assert sorted(blocks.tolist()) == list(range(flash.n_blocks))
+    # group-major dense: reshaping by group recovers contiguous groups
+    per_group = lay.n_elements // lay.n_groups
+    assert (lay.group.reshape(lay.n_groups, per_group)
+            == np.arange(lay.n_groups)[:, None]).all()
+
+
+@pytest.mark.parametrize("spec", SPECS, ids=lambda s: s.name)
+def test_element_blocks_share_group_luns(spec):
+    flash = custom16()
+    lay = build_layout(flash, spec)
+    B = flash.blocks_per_lun
+    for e in (0, lay.n_elements // 2, lay.n_elements - 1):
+        luns = np.unique(lay.blocks[e] // B)
+        assert len(luns) == lay.luns_per_group
+
+
+def test_fixed_layout_band_interleaved():
+    """Consecutive FIXED physical zones must land on different LUN bands
+    (paper Fig. 9: concurrent zones scale bandwidth)."""
+    flash = custom16()
+    zone = ZoneGeometry(parallelism=4, n_segments=1)
+    lay = build_layout(flash, FIXED, zone)
+    assert lay.n_groups == 4  # 16 LUNs / P4 = 4 bands
+    assert lay.group[0] != lay.group[1]
+    assert set(lay.group[:4].tolist()) == {0, 1, 2, 3}
+
+
+def test_fixed_layout_partitions_blocks():
+    flash = custom16()
+    zone = ZoneGeometry(parallelism=8, n_segments=2)
+    lay = build_layout(flash, FIXED, zone)
+    blocks = lay.blocks.reshape(-1)
+    assert sorted(blocks.tolist()) == list(range(flash.n_blocks))
+    assert lay.blocks_per_element == zone.blocks_per_zone
+
+
+@pytest.mark.parametrize("P,segs", [(16, 1), (16, 2), (8, 1), (8, 2),
+                                    (4, 1), (4, 2)])
+def test_paper_applicability_table(P, segs):
+    """Reproduce the N/A cells of paper Tables 3-4."""
+    flash = custom16()
+    zone = ZoneGeometry(parallelism=P, n_segments=segs)
+    assert is_applicable(SUPERBLOCK, zone, flash) == (P == 16)
+    assert is_applicable(hchunk(2), zone, flash) == (segs % 2 == 0)
+    assert is_applicable(vchunk(2), zone, flash)
+    assert is_applicable(vchunk(4), zone, flash)
+    assert is_applicable(BLOCK, zone, flash)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.sampled_from([1, 2, 4]), st.sampled_from([1, 2, 4]),
+       st.sampled_from([4, 8, 16]))
+def test_zone_element_counts(ways, segs, P):
+    flash = FlashGeometry(n_channels=4, ways_per_channel=ways,
+                          blocks_per_lun=8, pages_per_block=4,
+                          page_bytes=4096)
+    if P > flash.n_luns:
+        return
+    zone = ZoneGeometry(parallelism=P, n_segments=segs)
+    for spec in SPECS:
+        if not is_applicable(spec, zone, flash):
+            continue
+        try:
+            lay = build_layout(flash, spec)
+        except ValueError:
+            continue
+        n_e = elements_per_zone(lay, zone)
+        n_g = groups_per_zone(lay, zone)
+        assert n_e * lay.blocks_per_element == zone.blocks_per_zone
+        assert n_e % n_g == 0
+
+
+def test_zn540_matches_paper_numbers():
+    flash, zone = zn540()
+    assert flash.n_luns == 4
+    assert flash.page_bytes == 16 * 1024
+    assert flash.pages_per_block == 768
+    # 1 GiB-class zone from 22 superblocks of 4 blocks (paper §6.1)
+    assert zone.blocks_per_zone == 88
+    assert zone.zone_bytes(flash) == 88 * 768 * 16 * 1024
+    assert flash.n_blocks // zone.blocks_per_zone == 48  # 48 zones
+
+
+def test_custom16_matches_paper_numbers():
+    flash = custom16()
+    assert flash.n_luns == 16
+    lay = build_layout(flash, SUPERBLOCK)
+    assert lay.n_elements == 128          # "128 superblocks"
+    assert lay.pages_per_element * flash.page_bytes == 128 * 1024 * 1024

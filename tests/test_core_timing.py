@@ -1,0 +1,72 @@
+"""Timing-model invariants: resource serialization lower bounds."""
+
+import numpy as np
+import pytest
+
+from repro.core import IOTrace, custom16
+from repro.core import timing
+
+
+def test_single_lun_serializes():
+    flash = custom16()
+    n = 100
+    tr = IOTrace(np.zeros(n, np.int64), np.zeros(n, np.int64), "write")
+    stats = timing.run_trace(flash, [tr])
+    expected = n * flash.t_prog  # one LUN: programs serialize
+    assert stats["makespan_s"] >= expected * 0.99
+
+
+def test_parallel_luns_scale():
+    flash = custom16()
+    n = 160
+    luns = np.arange(n, dtype=np.int64) % flash.n_luns
+    tr = IOTrace(luns, luns % flash.n_channels, "write")
+    stats = timing.run_trace(flash, [tr])
+    serial = n * flash.t_prog
+    # 16 LUNs across 8 channels: ~16x speedup minus channel transfer
+    assert stats["makespan_s"] < serial / 8
+
+
+def test_channel_contention():
+    """Two LUNs on the same channel share the transfer bus."""
+    flash = custom16()
+    n = 64
+    # LUN 0 and LUN 8 share channel 0 (lun % n_channels)
+    luns = np.where(np.arange(n) % 2 == 0, 0, 8).astype(np.int64)
+    tr = IOTrace(luns, luns % flash.n_channels, "write")
+    stats = timing.run_trace(flash, [tr])
+    # both LUNs busy concurrently but xfers serialize on the channel
+    lower = (n // 2) * flash.t_prog
+    assert stats["makespan_s"] >= lower * 0.99
+    assert stats["makespan_s"] <= lower + n * flash.t_xfer + flash.t_prog
+
+
+def test_erase_dominates():
+    flash = custom16()
+    tr = IOTrace(np.zeros(4, np.int64), np.zeros(4, np.int64), "erase")
+    stats = timing.run_trace(flash, [tr])
+    assert stats["makespan_s"] >= 4 * flash.t_erase
+
+
+def test_interleaved_streams_slower_than_solo():
+    flash = custom16()
+    n = 128
+    luns = (np.arange(n) % flash.n_luns).astype(np.int64)
+    host = IOTrace(luns, luns % flash.n_channels, "write")
+    noise = IOTrace(luns.copy(), luns % flash.n_channels, "write")
+    solo = timing.run_trace(flash, [host])
+    both = timing.run_trace(flash, [host, noise])
+    assert both["owner0_makespan_s"] > solo["owner0_makespan_s"]
+
+
+def test_throughput_matches_device_limit():
+    """16 LUNs x 4 KiB / 525us = ~119 MiB/s peak write bandwidth."""
+    flash = custom16()
+    n = 1600
+    luns = (np.arange(n) % flash.n_luns).astype(np.int64)
+    tr = IOTrace(luns, luns % flash.n_channels, "write")
+    stats = timing.run_trace(flash, [tr])
+    bw = timing.write_bandwidth_mib_s(flash, stats)
+    peak = flash.n_luns * flash.page_bytes / (
+        flash.t_prog + flash.t_xfer) / (1024 * 1024)
+    assert bw == pytest.approx(peak, rel=0.1)

@@ -1,0 +1,28 @@
+"""Smoke tests for the runnable examples (subprocess; CPU-fast paths)."""
+
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def run_example(script: str, *args, timeout=420) -> str:
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "examples" / script), *args],
+        capture_output=True, text=True, timeout=timeout,
+        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin",
+             "HOME": "/tmp"},
+        cwd=str(REPO))
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    return proc.stdout
+
+
+def test_quickstart():
+    out = run_example("quickstart.py")
+    assert "86.4%" in out          # the paper's headline number
+
+
+def test_serve_decode():
+    out = run_example("serve_decode.py", "xlstm-125m")
+    assert "decode:" in out and "tok/s" in out

@@ -1,0 +1,88 @@
+"""Property tests: the closed-form striping accounting in core/zns.py
+must equal a brute-force page-by-page placement simulation for every
+element kind, geometry, and write pointer."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import zns
+from repro.core.elements import ElementSpec, ElementKind, hchunk, vchunk, BLOCK, SUPERBLOCK, FIXED
+
+
+def brute_force_block_pages(wp, P, segs, ppb):
+    """Place pages one at a time following the paper's write order."""
+    blocks = np.zeros((segs, P), dtype=np.int64)
+    for p in range(wp):
+        seg = p // (P * ppb)
+        q = p % (P * ppb)
+        col = q % P
+        blocks[seg, col] += 1
+    return blocks
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 4).map(lambda x: 2 ** x),   # P in {2,4,8,16}
+       st.integers(1, 4),                          # segments
+       st.sampled_from([4, 8, 16]),                # pages per block
+       st.floats(0.0, 1.0))
+def test_pages_per_block_matches_bruteforce(P, segs, ppb, frac):
+    cap = P * segs * ppb
+    wp = int(round(frac * cap))
+    fast = zns.pages_per_block(wp, P, segs, ppb)
+    slow = brute_force_block_pages(wp, P, segs, ppb)
+    assert (np.asarray(fast) == slow).all()
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.sampled_from([2, 4, 8]),                 # P
+       st.sampled_from([1, 2, 4]),                 # segments
+       st.sampled_from([4, 8]),                    # ppb
+       st.floats(0.0, 1.0),
+       st.sampled_from(["block", "vchunk2", "hchunk2", "superblock",
+                        "fixed"]))
+def test_element_pages_partition_and_total(P, segs, ppb, frac, kind):
+    spec = {"block": BLOCK, "vchunk2": vchunk(2), "hchunk2": hchunk(2),
+            "superblock": SUPERBLOCK, "fixed": FIXED}[kind]
+    # applicability constraints
+    if spec.kind is ElementKind.VCHUNK and P % spec.chunk:
+        return
+    if spec.kind is ElementKind.HCHUNK and segs % spec.chunk:
+        return
+    if spec.kind is ElementKind.SUPERBLOCK and False:
+        return
+    cap = P * segs * ppb
+    wp = int(round(frac * cap))
+    if spec.kind is ElementKind.SUPERBLOCK:
+        # superblock slots span the full parallelism of the zone
+        pages = zns.element_pages(wp, spec, P, segs, ppb)
+    else:
+        pages = zns.element_pages(wp, spec, P, segs, ppb)
+    # partition: element page counts sum to the write pointer
+    assert int(np.sum(pages)) == wp
+    # bound: no element exceeds its capacity
+    blocks_per = {"block": 1, "vchunk2": 2, "hchunk2": 2,
+                  "superblock": P, "fixed": P * segs}[kind]
+    assert int(np.max(pages, initial=0)) <= blocks_per * ppb
+    # slot count matches the layout math
+    assert len(pages) == zns.n_slots(spec, P, segs)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.sampled_from([4, 8]), st.sampled_from([2, 4]),
+       st.sampled_from([4, 8]), st.floats(0.05, 0.95))
+def test_pad_stream_covers_exactly_the_padding(P, segs, ppb, frac):
+    """pad_stream must emit exactly (capacity - written) pages for every
+    partially-written element and nothing for released ones."""
+    spec = vchunk(2)
+    if P % 2:
+        return
+    cap = P * segs * ppb
+    wp = max(1, int(round(frac * cap)))
+    pages = zns.element_pages(wp, spec, P, segs, ppb)
+    elem_cap = 2 * ppb
+    padded_slots = np.nonzero((pages > 0) & (pages < elem_cap))[0]
+    expected_pad = int(np.sum(elem_cap - pages[padded_slots]))
+    luns, chans = zns.pad_stream(wp, cap, spec, P, ppb,
+                                 np.arange(P), padded_slots, 4)
+    assert len(luns) == expected_pad
+    assert (chans == luns % 4).all()

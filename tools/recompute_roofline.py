@@ -1,0 +1,30 @@
+"""Recompute the analytic roofline terms in dry-run JSONs without
+recompiling (the compile proof is unchanged; only the cost model moved)."""
+import json, sys, glob
+sys.path.insert(0, "src")
+from repro.analysis import flops as FL
+from repro.analysis import roofline as roof
+from repro.configs import get_arch, get_shape
+from repro.launch import sharding as SH
+
+for path in glob.glob("results/dryrun/*.json"):
+    d = json.load(open(path))
+    if not d.get("ok"):
+        continue
+    cfg = get_arch(d["arch"]); cell = get_shape(d["shape"])
+    r = d["roofline"]
+    mesh_data = d["mesh_shape"]["data"]
+    cost = FL.cell_cost(cfg, cell, d["devices"], dp=r["dp"], tp=r["tp"],
+                        n_micro=r["n_micro"], fsdp=SH._needs_fsdp(cfg),
+                        append_impl="scatter", param_dp=mesh_data)
+    rl = roof.Roofline(flops=cost.flops, hbm_bytes=cost.hbm_bytes,
+                       coll_bytes=max(cost.coll_bytes,
+                                      d["collectives"].get("total", 0)),
+                       model_flops=cost.model_flops)
+    rep = rl.report()
+    rep["n_micro"], rep["dp"], rep["tp"] = r["n_micro"], r["dp"], r["tp"]
+    rep["residency_gb"] = round(cost.detail["residency_bytes"] / 1e9, 2)
+    d["roofline"] = rep
+    d["analytic_detail"] = {k: v for k, v in cost.detail.items()}
+    json.dump(d, open(path, "w"), indent=1, default=str)
+print("recomputed", len(glob.glob("results/dryrun/*.json")))

