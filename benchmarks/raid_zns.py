@@ -1,0 +1,186 @@
+"""ZNS-RAID fleet benchmark: device count x chunk x parity x allocator.
+
+Two modes, same ``name,us_per_call,derived`` CSV schema as
+``benchmarks/run.py`` (via :class:`benchmarks.common.Bench`):
+
+* sweep (default)::
+
+      PYTHONPATH=src python benchmarks/raid_zns.py [--quick]
+
+  crosses device count x stripe-chunk size x parity on/off x allocator
+  spec and emits one row per cell.
+
+* single end-to-end run::
+
+      PYTHONPATH=src python benchmarks/raid_zns.py --devices 8 --parity
+
+  fills superzones through ``ZoneFS``, FINISHes them, simulates the
+  whole fleet in one vmapped scan, and prints per-device DLWA/wear plus
+  the fleet makespan.
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+from typing import Dict, Optional
+
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+for _p in (str(_ROOT), str(_ROOT / "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+from benchmarks.common import Bench
+from repro.array import ZNSArray
+from repro.core import (BLOCK, FIXED, SUPERBLOCK, timing, vchunk, zn540)
+from repro.core.elements import ElementSpec
+from repro.storage import ZoneFS
+
+SPECS: Dict[str, ElementSpec] = {
+    "fixed": FIXED, "superblock": SUPERBLOCK, "block": BLOCK,
+    "vchunk2": vchunk(2),
+}
+
+
+def build_array(n_devices: int, chunk_pages: Optional[int], parity: bool,
+                spec: ElementSpec) -> ZNSArray:
+    flash, zone = zn540()
+    return ZNSArray.build(flash, zone, spec, n_devices=n_devices,
+                          chunk_pages=chunk_pages, parity=parity,
+                          max_active=14)
+
+
+def raid_benchmark(*, n_devices: int, chunk_pages: Optional[int] = None,
+                   parity: bool = False, spec: ElementSpec = SUPERBLOCK,
+                   occupancy: float = 0.5, n_zones: int = 4) -> Dict:
+    """Fill ``n_zones`` superzones to ``occupancy``, FINISH each, and
+    time the resulting fleet traffic (data + parity + FINISH padding)
+    in one vmapped scan."""
+    arr = build_array(n_devices, chunk_pages, parity, spec)
+    pages = max(1, int(round(arr.zone_pages * occupancy)))
+    tagged = []
+    for z in range(min(n_zones, arr.max_active, arr.n_zones)):
+        tagged += arr.zone_write(z, pages, trace=True) or []
+        tagged += arr.zone_finish(z, trace=True) or []
+    fleet = timing.run_fleet_trace(
+        arr.flash, timing.group_tagged(tagged, n_devices))
+    rep = arr.report()
+    rep["fleet_makespan_s"] = fleet["fleet_makespan_s"]
+    rep["fleet_pages"] = float(fleet["n"])
+    for i in range(n_devices):
+        rep[f"dev{i}_makespan_s"] = fleet[f"dev{i}_makespan_s"]
+    per = arr.device_reports()
+    rep["mean_device_dlwa"] = sum(r["dlwa"] for r in per) / len(per)
+    return rep
+
+
+class TracingArray(ZNSArray):
+    """ZNSArray that records every member IOTrace it emits, so hosts
+    that never ask for traces (ZoneFS) can still be fleet-timed."""
+
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self.tagged: list = []
+
+    def zone_write(self, zone_id, n_pages, *, host=True, trace=False):
+        out = super().zone_write(zone_id, n_pages, host=host, trace=True)
+        self.tagged += out
+        return out if trace else None
+
+    def zone_finish(self, zone_id, *, trace=False):
+        out = super().zone_finish(zone_id, trace=True)
+        self.tagged += out or []
+        return out if trace else None
+
+
+def fleet_run(args: argparse.Namespace) -> Dict:
+    """End-to-end: KV-style ZoneFS traffic over the array, then fleet
+    timing of that same traffic; prints per-device DLWA/wear and the
+    fleet makespan."""
+    spec = SPECS[args.spec]
+    flash, zone = zn540()
+    arr = TracingArray.build(flash, zone, spec, n_devices=args.devices,
+                             chunk_pages=args.chunk_pages,
+                             parity=args.parity, max_active=14)
+    fs = ZoneFS(arr, finish_threshold=args.finish_threshold)
+    # rotating create/delete traffic: files of ~1/3 superzone, lifetimes
+    # cycling so zones mix and FINISH/RESET both fire
+    file_pages = max(1, arr.zone_pages // 3)
+    live = []
+    for fid in range(args.files):
+        if not fs.create(fid, file_pages, lifetime=fid % 3):
+            break
+        live.append(fid)
+        if len(live) > 6:
+            fs.delete(live.pop(0))
+    for z, info in arr.zones.items():
+        if info.state.name == "OPEN":
+            fs.dev.zone_finish(z)
+
+    fleet = timing.run_fleet_trace(
+        arr.flash, timing.group_tagged(arr.tagged, args.devices))
+
+    rep = arr.report()
+    rep.update(fs.report())
+    rep["fleet_makespan_s"] = fleet["fleet_makespan_s"]
+    print(f"# array {arr.geom.describe()} spec={args.spec} "
+          f"finish_threshold={args.finish_threshold}")
+    print("device,dlwa,host_pages,dummy_pages,total_block_erases,"
+          "max_wear,cv_wear,failed")
+    for r in arr.device_reports():
+        print(f"{int(r['device'])},{r['dlwa']:.4f},{int(r['host_pages'])},"
+              f"{int(r['dummy_pages'])},{int(r['total_block_erases'])},"
+              f"{int(r['max_wear'])},{r['cv_wear']:.4f},"
+              f"{int(r['failed'])}")
+    print(f"array_dlwa,{rep['dlwa']:.4f}")
+    print(f"parity_overhead,{rep['parity_overhead']:.4f}")
+    print(f"sa,{rep['sa']:.4f}")
+    print(f"fleet_makespan_s,{rep['fleet_makespan_s']:.6f}")
+    return rep
+
+
+def sweep(quick: bool) -> None:
+    b = Bench()
+    flash, zone = zn540()
+    seg = zone.segment_pages(flash)
+    devices = (1, 2, 4) if quick else (1, 2, 4, 8)
+    chunks = (seg,) if quick else (seg, 2 * seg)
+    specs = ("fixed", "superblock") if quick else (
+        "fixed", "superblock", "vchunk2")
+    for n_dev in devices:
+        for chunk in chunks:
+            for parity in (False, True):
+                if parity and n_dev < 2:
+                    continue
+                for spec_name in specs:
+                    name = (f"raid_d{n_dev}_c{chunk}_"
+                            f"{'p1' if parity else 'p0'}_{spec_name}")
+                    b.timeit(name, lambda n=n_dev, c=chunk, p=parity,
+                             s=spec_name: raid_benchmark(
+                                 n_devices=n, chunk_pages=c, parity=p,
+                                 spec=SPECS[s]),
+                             ("dlwa", "parity_overhead", "max_device_dlwa",
+                              "fleet_makespan_s", "total_block_erases"))
+    b.emit()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--devices", type=int, default=0,
+                    help="single-run mode with this many member devices")
+    ap.add_argument("--parity", action="store_true")
+    ap.add_argument("--chunk-pages", type=int, default=None)
+    ap.add_argument("--spec", choices=sorted(SPECS), default="superblock")
+    ap.add_argument("--finish-threshold", type=float, default=0.1)
+    ap.add_argument("--files", type=int, default=24)
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    if args.devices:
+        fleet_run(args)
+    else:
+        sweep(args.quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""Multi-device ZNS arrays: log-structured RAID over emulated devices.
+
+``ZNSArray`` stripes logical superzones across N :class:`ZNSDevice`
+members at zone-chunk granularity with optional RAID-5-style
+log-structured parity, and implements the same
+:class:`repro.core.backend.ZoneBackend` surface as a single device --
+``ZoneFS`` and everything above it mount either interchangeably.
+"""
+
+from repro.array.raid import (ArrayGeometry, SuperZoneInfo, TaggedTrace,
+                              ZNSArray)
+
+__all__ = ["ArrayGeometry", "SuperZoneInfo", "TaggedTrace", "ZNSArray"]

@@ -1,0 +1,77 @@
+"""The ``ZoneBackend`` protocol: the zone-command surface hosts consume.
+
+:class:`repro.storage.zonefs.ZoneFS` (and through it the LSM simulator,
+the checkpoint benchmark, and every other host-side workload) only ever
+touches a device through this surface:
+
+* geometry     -- ``zone_pages``, ``n_zones``, ``max_active``,
+                  ``flash`` (for ``page_bytes`` and timing constants);
+* zone state   -- ``zones[z].state`` / ``zones[z].wp``;
+* commands     -- ``zone_write`` / ``zone_read`` / ``zone_finish`` /
+                  ``zone_reset``;
+* metrics      -- ``dlwa``, ``host_pages``, ``dummy_pages``.
+
+Anything implementing this protocol can be mounted by a host unchanged.
+Today there are two implementations: a single emulated
+:class:`repro.core.device.ZNSDevice` and the multi-device
+:class:`repro.array.ZNSArray` (zone-chunk striping + log-structured
+parity), which is what turns every single-device workload into a
+multi-device scenario for free.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Mapping, Optional, Protocol, runtime_checkable
+
+import numpy as np
+
+from repro.core.geometry import FlashGeometry
+
+
+@runtime_checkable
+class ZoneBackend(Protocol):
+    """Structural type for anything that serves ZNS zone commands."""
+
+    flash: FlashGeometry
+    max_active: int
+
+    @property
+    def zone_pages(self) -> int: ...          # host-visible pages per zone
+
+    @property
+    def n_zones(self) -> int: ...
+
+    @property
+    def zones(self) -> Mapping[int, Any]: ...  # z -> obj with .state / .wp
+
+    @property
+    def dlwa(self) -> float: ...
+
+    @property
+    def host_pages(self) -> int: ...
+
+    @property
+    def dummy_pages(self) -> int: ...
+
+    def zone_write(self, zone_id: int, n_pages: int, *, host: bool = True,
+                   trace: bool = False) -> Optional[Any]: ...
+
+    def zone_read(self, zone_id: int, pages: np.ndarray) -> Any: ...
+
+    def zone_finish(self, zone_id: int, *, trace: bool = False
+                    ) -> Optional[Any]: ...
+
+    def zone_reset(self, zone_id: int) -> None: ...
+
+
+def check_backend(obj: Any) -> None:
+    """Raise ``TypeError`` if ``obj`` is missing part of the surface."""
+    missing = [name for name in
+               ("flash", "max_active", "zone_pages", "n_zones", "zones",
+                "dlwa", "host_pages", "dummy_pages", "zone_write",
+                "zone_read", "zone_finish", "zone_reset")
+               if not hasattr(obj, name)]
+    if missing:
+        raise TypeError(
+            f"{type(obj).__name__} does not implement ZoneBackend "
+            f"(missing: {', '.join(missing)})")

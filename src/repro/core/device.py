@@ -252,10 +252,14 @@ class ZNSDevice:
         return out
 
     def _column_luns(self, window_groups: np.ndarray) -> np.ndarray:
-        """Zone column -> LUN id, from the groups that won the allocation."""
-        if self.spec.kind is ElementKind.FIXED:
-            # static zone: its blocks define the columns
-            e = window_groups  # unused; fixed zones span P adjacent LUNs
+        """Zone column -> LUN id, from the groups that won the allocation.
+
+        FIXED-zone column convention: a static physical zone is pinned to
+        ``parallelism`` *adjacent* LUNs starting at ``group * parallelism``
+        (its erase blocks are laid out contiguously, so the winning group
+        index alone determines every column).  Dynamic elements instead
+        contribute ``luns_per_group`` columns per winning group.
+        """
         s = self.layout.luns_per_group
         luns = []
         for g in window_groups:

@@ -22,7 +22,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional
 
-from repro.core.device import ZNSDevice, ZoneState
+from repro.core.backend import ZoneBackend, check_backend
+from repro.core.device import ZoneState
 from repro.core.metrics import SATracker
 
 
@@ -62,12 +63,14 @@ class _Session:
 
 
 class ZoneFS:
-    """Lifetime-aware zoned filesystem over a :class:`ZNSDevice` with
-    concurrent file sessions."""
+    """Lifetime-aware zoned filesystem over any :class:`ZoneBackend`
+    (a bare :class:`repro.core.device.ZNSDevice` or a multi-device
+    :class:`repro.array.ZNSArray`) with concurrent file sessions."""
 
-    def __init__(self, dev: ZNSDevice, *, finish_threshold: float = 0.1):
+    def __init__(self, dev: ZoneBackend, *, finish_threshold: float = 0.1):
         """``finish_threshold`` is expressed as *occupancy*: a victim zone
         may be FINISHed only if wp/capacity >= threshold (paper §6.2)."""
+        check_backend(dev)
         self.dev = dev
         self.finish_threshold = finish_threshold
         self.max_open = dev.max_active

@@ -35,6 +35,7 @@ import ml_dtypes
 import numpy as np
 
 from repro.core import SUPERBLOCK, ZNSDevice, zn540
+from repro.core.backend import ZoneBackend
 from repro.core.elements import ElementSpec
 from repro.storage.zonefs import ZoneFS
 
@@ -55,12 +56,20 @@ def _key_str(path) -> str:
 
 
 class ZNSTelemetry:
-    """Mirrors checkpoint I/O into an emulated SilentZNS/baseline device."""
+    """Mirrors checkpoint I/O into an emulated SilentZNS/baseline backend.
+
+    ``backend`` accepts any :class:`ZoneBackend` -- e.g. a
+    :class:`repro.array.ZNSArray` to model checkpointing onto a
+    multi-device ZNS-RAID fleet; defaults to a single zn540 device.
+    """
 
     def __init__(self, element: ElementSpec = SUPERBLOCK,
-                 finish_threshold: float = 0.1):
-        flash, zone = zn540()
-        self.dev = ZNSDevice(flash, zone, element, max_active=14)
+                 finish_threshold: float = 0.1,
+                 backend: Optional[ZoneBackend] = None):
+        if backend is None:
+            flash, zone = zn540()
+            backend = ZNSDevice(flash, zone, element, max_active=14)
+        self.dev = backend
         self.fs = ZoneFS(self.dev, finish_threshold=finish_threshold)
         self._next_file = 0
         self.file_ids: Dict[str, int] = {}

@@ -1,0 +1,86 @@
+"""Minimal deterministic stand-in for ``hypothesis``.
+
+Loaded by ``conftest.py`` only when the real package is missing (the
+pinned CI/tier-1 image does not ship it, and installing packages is not
+an option there).  It covers exactly the surface this repo's property
+tests use -- ``@settings(max_examples=..., deadline=...)``, ``@given``
+over positional strategies, and ``st.integers`` / ``st.floats`` /
+``st.sampled_from`` (plus ``.map``) -- by enumerating a fixed number of
+seeded pseudo-random examples.  No shrinking, no example database: a
+failure reports the concrete arguments via the assertion itself.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import types
+from typing import Any, Callable, Sequence
+
+_DEFAULT_MAX_EXAMPLES = 20
+_SEED = 0xC0FFEE
+
+
+class _Strategy:
+    def __init__(self, draw: Callable[[random.Random], Any]):
+        self._draw = draw
+
+    def example(self, rng: random.Random) -> Any:
+        return self._draw(rng)
+
+    def map(self, fn: Callable[[Any], Any]) -> "_Strategy":
+        return _Strategy(lambda rng: fn(self._draw(rng)))
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value: float, max_value: float) -> _Strategy:
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def sampled_from(elements: Sequence[Any]) -> _Strategy:
+    pool = list(elements)
+    return _Strategy(lambda rng: pool[rng.randrange(len(pool))])
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.integers = integers
+strategies.floats = floats
+strategies.sampled_from = sampled_from
+strategies.booleans = booleans
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_ignored) -> Callable:
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats: _Strategy) -> Callable:
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_stub_max_examples",
+                        getattr(fn, "_stub_max_examples",
+                                _DEFAULT_MAX_EXAMPLES))
+            rng = random.Random(_SEED)
+            for _ in range(n):
+                fn(*args, *(s.example(rng) for s in strats), **kwargs)
+
+        # hide the strategy-filled trailing parameters from pytest's
+        # fixture resolution (real hypothesis rewrites the signature too)
+        params = list(inspect.signature(fn).parameters.values())
+        kept = params[: len(params) - len(strats)]
+        wrapper.__signature__ = inspect.Signature(kept)
+        del wrapper.__wrapped__
+        return wrapper
+    return deco

@@ -1,0 +1,22 @@
+"""Shared test setup.
+
+If the real ``hypothesis`` package is unavailable (the pinned tier-1
+image does not ship it and cannot install it), register the minimal
+deterministic stub from ``_hypothesis_stub.py`` under the ``hypothesis``
+name so every property-test module still imports and runs.
+"""
+
+import importlib.util
+import pathlib
+import sys
+
+try:
+    import hypothesis  # noqa: F401  (real package wins when present)
+except ModuleNotFoundError:
+    _spec = importlib.util.spec_from_file_location(
+        "hypothesis",
+        pathlib.Path(__file__).with_name("_hypothesis_stub.py"))
+    _mod = importlib.util.module_from_spec(_spec)
+    _spec.loader.exec_module(_mod)
+    sys.modules["hypothesis"] = _mod
+    sys.modules["hypothesis.strategies"] = _mod.strategies

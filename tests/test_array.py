@@ -1,0 +1,301 @@
+"""ZNS-RAID array: striping, parity, degraded reads, backend equality,
+and the vmapped fleet-timing path."""
+
+import numpy as np
+import pytest
+
+from repro.array import ArrayGeometry, ZNSArray
+from repro.core import (FIXED, SUPERBLOCK, ZNSDevice, ZoneState, timing,
+                        zn540)
+from repro.core.backend import ZoneBackend, check_backend
+from repro.storage import KVBenchConfig, LSMSimulator, ZoneFS
+
+
+def build(n_devices, *, parity=False, chunk_pages=None, spec=SUPERBLOCK):
+    flash, zone = zn540()
+    return ZNSArray.build(flash, zone, spec, n_devices=n_devices,
+                          chunk_pages=chunk_pages, parity=parity,
+                          max_active=14)
+
+
+# --------------------------------------------------------------------- #
+# geometry / protocol
+# --------------------------------------------------------------------- #
+def test_backend_protocol():
+    flash, zone = zn540()
+    dev = ZNSDevice(flash, zone, SUPERBLOCK)
+    arr = build(2)
+    for obj in (dev, arr):
+        check_backend(obj)
+        assert isinstance(obj, ZoneBackend)
+    with pytest.raises(TypeError, match="ZoneBackend"):
+        check_backend(object())
+
+
+def test_geometry_validation():
+    with pytest.raises(ValueError, match="parity"):
+        ArrayGeometry(n_devices=1, chunk_pages=64, parity=True)
+    flash, zone = zn540()
+    with pytest.raises(ValueError, match="divide"):
+        ZNSArray.build(flash, zone, SUPERBLOCK, n_devices=2,
+                       chunk_pages=7)
+
+
+def test_capacity_scales_with_data_devices():
+    assert build(4).zone_pages == 4 * build(1).zone_pages
+    assert build(4, parity=True).zone_pages == 3 * build(1).zone_pages
+
+
+def test_superzone_overflow_raises():
+    arr = build(2)
+    arr.zone_write(0, arr.zone_pages)
+    assert arr.zones[0].state is ZoneState.FULL
+    with pytest.raises(RuntimeError, match="FULL"):
+        arr.zone_write(0, 1)
+    arr2 = build(2)
+    with pytest.raises(RuntimeError, match="overflow"):
+        arr2.zone_write(0, arr2.zone_pages + 1)
+
+
+def test_write_is_sequential_per_member():
+    """Chunk striping must produce an append-only stream per member."""
+    arr = build(4, parity=True)
+    c = arr.geom.chunk_pages
+    for step in (c // 3, c, 2 * c + 5, arr.zone_pages):  # ragged appends
+        arr2 = build(4, parity=True)
+        wp = 0
+        while wp < arr2.zone_pages:
+            n = min(step, arr2.zone_pages - wp)
+            arr2.zone_write(0, n)  # raises inside the member if the
+            wp += n                # per-device stream ever went backwards
+        assert all(d.zones[0].wp == arr2.dev_zone_pages
+                   for d in arr2.devices)
+
+
+# --------------------------------------------------------------------- #
+# parity accounting
+# --------------------------------------------------------------------- #
+def test_parity_emitted_per_completed_stripe():
+    arr = build(4, parity=True)
+    c, k = arr.geom.chunk_pages, arr.geom.n_data
+    arr.zone_write(0, 2 * c * k + c)     # 2 full stripes + 1 chunk
+    assert arr.parity_pages == 2 * c
+    assert arr.zones[0].parity_emitted == 2
+
+
+def test_parity_rotates_across_devices():
+    arr = build(4, parity=True)
+    arr.zone_write(0, arr.zone_pages)
+    s = arr.stripes_per_zone
+    owners = [arr._parity_device(0, i) for i in range(s)]
+    counts = np.bincount(owners, minlength=4)
+    assert counts.min() >= s // 4  # RAID-5 rotation: no parity hotspot
+    # superzone offset shifts the rotation
+    assert arr._parity_device(1, 0) != arr._parity_device(0, 0)
+
+
+def test_parity_stripe_finish_padding_accounting():
+    """FINISH of a partial stripe: one parity chunk is appended for the
+    written prefix, member FINISH padding rolls up, and the array DLWA
+    identity (host+parity+dummy)/host holds exactly."""
+    arr = build(4, parity=True)
+    c, k = arr.geom.chunk_pages, arr.geom.n_data
+    n = c * k + c // 2                    # 1 full stripe + half a chunk
+    arr.zone_write(0, n)
+    assert arr.parity_pages == c          # only the full stripe so far
+    arr.zone_finish(0)
+    assert arr.parity_pages == 2 * c      # + partial-stripe parity chunk
+    assert arr.zones[0].state is ZoneState.FULL
+    # the half-written data chunk and the parity chunks were padded to
+    # their element boundaries by the member FINISHes
+    assert arr.dummy_pages == sum(d.dummy_pages for d in arr.devices)
+    assert arr.dummy_pages > 0
+    assert arr.dlwa == pytest.approx(
+        (arr.host_pages + arr.parity_pages + arr.dummy_pages)
+        / arr.host_pages)
+    # host accounting is logical only: members saw data + parity pages
+    member_host = sum(d.host_pages for d in arr.devices)
+    assert member_host == arr.host_pages + arr.parity_pages
+
+
+def test_finish_empty_superzone_is_noop():
+    arr = build(2, parity=True)
+    arr.zone_finish(0)
+    assert arr.zones[0].state is ZoneState.FULL
+    assert arr.parity_pages == 0 and arr.dummy_pages == 0
+
+
+def test_reset_clears_members_and_state():
+    arr = build(2, parity=True)
+    arr.zone_write(0, arr.zone_pages // 2)
+    arr.zone_finish(0)
+    arr.zone_reset(0)
+    assert arr.zones[0].state is ZoneState.EMPTY
+    assert all(d.zones[0].state is ZoneState.EMPTY for d in arr.devices)
+    arr.zone_write(0, 10)  # reusable after reset
+
+
+# --------------------------------------------------------------------- #
+# reads: normal + degraded
+# --------------------------------------------------------------------- #
+def test_read_routes_pages_to_chunk_owners():
+    arr = build(4, parity=True)
+    c = arr.geom.chunk_pages
+    arr.zone_write(0, arr.zone_pages)
+    reads = arr.zone_read(0, np.asarray([0, c, 2 * c]))  # stripe 0 slots
+    by_dev = dict((i, len(t.luns)) for i, t in reads)
+    # stripe 0 of superzone 0: parity on device 0, data on 1..3
+    assert by_dev == {1: 1, 2: 1, 3: 1}
+    assert all(t.op == "read" for _, t in reads)
+
+
+def test_degraded_read_with_one_device_failed():
+    arr = build(4, parity=True)
+    c = arr.geom.chunk_pages
+    arr.zone_write(0, arr.zone_pages)
+    arr.fail_device(1)                    # holds data slot 0 of stripe 0
+    lost = np.arange(10)                  # logical pages on device 1
+    reads = arr.zone_read(0, lost)
+    by_dev = dict((i, len(t.luns)) for i, t in reads)
+    # reconstruction reads the same chunk row from every survivor
+    assert by_dev == {0: 10, 2: 10, 3: 10}
+    # device page offsets match the lost pages' stripe rows
+    for _, tr in reads:
+        assert len(tr.luns) == 10
+    # a second failure is not survivable with single parity
+    with pytest.raises(RuntimeError, match="second device failure"):
+        arr.fail_device(2)
+    arr.heal_device(1)
+    by_dev = dict((i, len(t.luns)) for i, t in arr.zone_read(0, lost))
+    assert by_dev == {1: 10}
+
+
+def test_degraded_read_of_unparitied_stripe_raises():
+    """A chunk lost from a still-open stripe is unrecoverable until its
+    log-structured parity has been appended (stripe completion/FINISH)."""
+    arr = build(4, parity=True)
+    c = arr.geom.chunk_pages
+    arr.zone_write(0, c)                  # one chunk: stripe 0 incomplete
+    arr.fail_device(1)                    # ... and it lived on device 1
+    with pytest.raises(RuntimeError, match="parity not yet written"):
+        arr.zone_read(0, np.asarray([0]))
+    arr.heal_device(1)
+    arr.zone_finish(0)                    # FINISH appends stripe-0 parity
+    arr.fail_device(1)
+    by_dev = dict((i, len(t.luns))
+                  for i, t in arr.zone_read(0, np.asarray([0])))
+    # reconstruct from the stripe's parity chunk (device 0) alone: the
+    # other data chunks were never written and contribute zeros
+    assert by_dev == {0: 1}
+
+
+def test_non_host_writes_count_as_member_dummy():
+    """ZoneBackend host=False semantics: pages reach the members as
+    padding traffic and stay out of the host counter."""
+    arr = build(2, parity=False)
+    arr.zone_write(0, 10, host=False)
+    assert arr.host_pages == 0
+    assert arr.dummy_pages == 10
+    arr.zone_write(0, 30)
+    assert arr.dlwa == pytest.approx((30 + 10) / 30)
+
+
+def test_failed_read_without_parity_raises():
+    arr = build(2, parity=False)
+    arr.zone_write(0, arr.zone_pages)
+    arr.fail_device(0)
+    with pytest.raises(RuntimeError, match="lost"):
+        arr.zone_read(0, np.asarray([0]))
+
+
+# --------------------------------------------------------------------- #
+# backend equality: 1-device array == bare device
+# --------------------------------------------------------------------- #
+def _zonefs_traffic(fs: ZoneFS) -> None:
+    """Deterministic create/delete mix exercising FINISH + RESET."""
+    pages = max(1, fs.dev.zone_pages // 3)
+    live = []
+    for fid in range(18):
+        assert fs.create(fid, pages, lifetime=fid % 3)
+        live.append(fid)
+        if len(live) > 5:
+            fs.delete(live.pop(0))
+
+
+def test_zonefs_report_equal_one_device_array_vs_bare_device():
+    flash, zone = zn540()
+    fs_dev = ZoneFS(ZNSDevice(flash, zone, SUPERBLOCK, max_active=14),
+                    finish_threshold=0.3)
+    fs_arr = ZoneFS(build(1), finish_threshold=0.3)
+    _zonefs_traffic(fs_dev)
+    _zonefs_traffic(fs_arr)
+    assert fs_arr.report() == fs_dev.report()
+
+
+@pytest.mark.parametrize("spec", [FIXED, SUPERBLOCK],
+                         ids=lambda s: s.name)
+def test_zonefs_report_equal_under_lsm(spec):
+    """Acceptance: ZoneFS + LSM run unmodified over device and array."""
+    flash, zone = zn540()
+    reports = []
+    for backend in (ZNSDevice(flash, zone, spec, max_active=14),
+                    ZNSArray.build(flash, zone, spec, n_devices=1,
+                                   max_active=14)):
+        fs = ZoneFS(backend, finish_threshold=0.1)
+        sim = LSMSimulator(fs, KVBenchConfig(n_ops=200_000))
+        reports.append(sim.run())
+    assert reports[0] == reports[1]
+
+
+def test_lsm_runs_on_parity_array():
+    arr = build(4, parity=True)
+    fs = ZoneFS(arr, finish_threshold=0.1)
+    rep = LSMSimulator(fs, KVBenchConfig(n_ops=200_000)).run()
+    assert rep["failed"] == 0.0
+    assert rep["host_pages"] == arr.host_pages
+
+
+# --------------------------------------------------------------------- #
+# fleet timing
+# --------------------------------------------------------------------- #
+def test_vmapped_fleet_matches_independent_simulate():
+    """Acceptance: the vmapped 8-device path reproduces 8 independent
+    ``simulate`` calls' per-device makespans."""
+    arr = build(8, parity=True)
+    tagged = arr.zone_write(0, 3 * arr.geom.chunk_pages * arr.geom.n_data
+                            + 17, trace=True)
+    tagged += arr.zone_finish(0, trace=True) or []
+    per_dev = timing.group_tagged(tagged, 8)
+    assert sum(len(t) for t in per_dev) == len(tagged)
+    fleet = timing.run_fleet_trace(arr.flash, per_dev)
+    for i, traces in enumerate(per_dev):
+        ref = timing.run_trace(arr.flash, traces)
+        assert fleet[f"dev{i}_makespan_s"] == pytest.approx(
+            ref["makespan_s"], rel=1e-6, abs=1e-9)
+    assert fleet["fleet_makespan_s"] == pytest.approx(
+        max(fleet[f"dev{i}_makespan_s"] for i in range(8)))
+
+
+def test_fleet_trace_handles_idle_devices():
+    arr = build(4, parity=False)
+    tagged = arr.zone_write(0, arr.geom.chunk_pages, trace=True)  # dev 0 only
+    fleet = timing.run_fleet_trace(arr.flash, timing.group_tagged(tagged, 4))
+    assert fleet["dev0_makespan_s"] > 0
+    assert fleet["dev1_makespan_s"] == 0.0
+    assert fleet["fleet_makespan_s"] == fleet["dev0_makespan_s"]
+
+
+def test_parity_traffic_lengthens_parity_member_makespan():
+    """Cross-device merge: with parity on, the stripe's parity member
+    programs a full extra chunk."""
+    flash, zone = zn540()
+    plain = ZNSArray.build(flash, zone, SUPERBLOCK, n_devices=4,
+                           parity=False)
+    par = ZNSArray.build(flash, zone, SUPERBLOCK, n_devices=4, parity=True)
+    n = 3 * par.geom.chunk_pages           # one full parity stripe
+    t_plain = timing.run_fleet_trace(
+        flash, timing.group_tagged(plain.zone_write(0, n, trace=True), 4))
+    t_par = timing.run_fleet_trace(
+        flash, timing.group_tagged(par.zone_write(0, n, trace=True), 4))
+    assert t_par["fleet_makespan_s"] >= t_plain["fleet_makespan_s"]
+    assert t_par["n"] == t_plain["n"] + par.geom.chunk_pages

@@ -4,6 +4,7 @@ jax locks the device count at first init, so each test runs a child
 python with XLA_FLAGS=--xla_force_host_platform_device_count=8.
 """
 
+import os
 import subprocess
 import sys
 from pathlib import Path
@@ -21,7 +22,11 @@ def run_child(code: str) -> str:
         [sys.executable, "-c", pre + code],
         capture_output=True, text=True, timeout=420,
         env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin",
-             "HOME": "/tmp"},
+             "HOME": "/tmp",
+             # without this, jax probes for accelerator backends and can
+             # stall for minutes per child on machines without them --
+             # these children force host devices, so CPU is what we mean
+             "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")},
         cwd=str(REPO))
     assert proc.returncode == 0, f"child failed:\n{proc.stderr[-3000:]}"
     return proc.stdout
@@ -178,7 +183,8 @@ def test_dryrun_cell_compiles_on_512_devices():
          "--mesh", "multi", "--out", out],
         capture_output=True, text=True, timeout=420,
         env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin",
-             "HOME": "/tmp"},
+             "HOME": "/tmp",
+             "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")},
         cwd=str(REPO))
     assert proc.returncode == 0, proc.stdout + proc.stderr[-2000:]
     res = json.loads(

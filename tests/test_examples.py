@@ -1,5 +1,6 @@
 """Smoke tests for the runnable examples (subprocess; CPU-fast paths)."""
 
+import os
 import subprocess
 import sys
 from pathlib import Path
@@ -12,7 +13,9 @@ def run_example(script: str, *args, timeout=420) -> str:
         [sys.executable, str(REPO / "examples" / script), *args],
         capture_output=True, text=True, timeout=timeout,
         env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin",
-             "HOME": "/tmp"},
+             "HOME": "/tmp",
+             # avoid multi-minute accelerator-backend probing stalls
+             "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")},
         cwd=str(REPO))
     assert proc.returncode == 0, proc.stderr[-2000:]
     return proc.stdout
