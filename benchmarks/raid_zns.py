@@ -17,6 +17,15 @@ Two modes, same ``name,us_per_call,derived`` CSV schema as
   fills superzones through ``ZoneFS``, FINISHes them, simulates the
   whole fleet in one vmapped scan, and prints per-device DLWA/wear plus
   the fleet makespan.
+
+* rebuild-after-failure::
+
+      PYTHONPATH=src python benchmarks/raid_zns.py --rebuild --devices 4
+
+  fails a member, reconstructs its chunks onto a replacement
+  (``ZNSArray.rebuild_device``: degraded reads on the survivors +
+  sequential re-append), and reports the rebuild traffic's fleet
+  makespan and its interference with concurrent host writes.
 """
 
 from __future__ import annotations
@@ -140,6 +149,64 @@ def fleet_run(args: argparse.Namespace) -> Dict:
     return rep
 
 
+def rebuild_run(args: argparse.Namespace) -> Dict:
+    """Rebuild-after-failure: fill superzones, fail a member, reconstruct
+    the replacement's chunks via degraded reads + sequential re-append,
+    and measure the rebuild traffic's interference with concurrent host
+    I/O (one vmapped fleet scan per scenario)."""
+    spec = SPECS[args.spec]
+    flash, zone = zn540()
+    n_dev = max(2, args.devices or 4)
+    arr = ZNSArray.build(flash, zone, spec, n_devices=n_dev,
+                         chunk_pages=args.chunk_pages, parity=True,
+                         max_active=14)
+    fill = max(1, int(round(arr.zone_pages * 0.6)))
+    n_filled = min(4, arr.n_zones // 2, arr.max_active)
+    for z in range(n_filled):
+        arr.zone_write(z, fill)
+        arr.zone_finish(z)
+
+    failed = n_dev - 1
+    arr.fail_device(failed)
+    rebuild_tagged = arr.rebuild_device(failed)
+
+    # concurrent host I/O: fresh superzones written while the rebuild runs
+    host_tagged = []
+    for z in range(n_filled, min(2 * n_filled, arr.n_zones)):
+        host_tagged += arr.zone_write(z, fill, trace=True) or []
+
+    base = timing.run_fleet_trace(
+        arr.flash, timing.group_tagged(host_tagged, n_dev))
+    reb = timing.run_fleet_trace(
+        arr.flash, timing.group_tagged(rebuild_tagged, n_dev))
+    cont = timing.run_fleet_trace(
+        arr.flash, timing.group_tagged(host_tagged + rebuild_tagged, n_dev))
+    interference = (cont["fleet_makespan_s"] / base["fleet_makespan_s"]
+                    if base["fleet_makespan_s"] else float("inf"))
+    rebuilt = sum(len(t.luns) for i, t in rebuild_tagged
+                  if i == failed and t.op == "write")
+    rep = {
+        "n_devices": float(n_dev),
+        "failed_device": float(failed),
+        # pages re-appended to the replacement (incl. its FINISH padding)
+        "rebuild_pages": float(rebuilt),
+        # every page the rebuild moves, survivor degraded reads included
+        "rebuild_traffic_pages": float(
+            sum(len(t.luns) for _, t in rebuild_tagged)),
+        "rebuild_makespan_s": reb["fleet_makespan_s"],
+        "host_makespan_s": base["fleet_makespan_s"],
+        "contended_makespan_s": cont["fleet_makespan_s"],
+        "rebuild_interference": interference,
+        "replacement_host_pages": float(arr.devices[failed].host_pages),
+        "replacement_dummy_pages": float(arr.devices[failed].dummy_pages),
+    }
+    print(f"# rebuild {arr.geom.describe()} spec={args.spec} "
+          f"failed={failed}")
+    for k, v in rep.items():
+        print(f"{k},{v:.6g}")
+    return rep
+
+
 def sweep(quick: bool) -> None:
     b = Bench()
     flash, zone = zn540()
@@ -174,9 +241,15 @@ def main() -> None:
     ap.add_argument("--spec", choices=sorted(SPECS), default="superblock")
     ap.add_argument("--finish-threshold", type=float, default=0.1)
     ap.add_argument("--files", type=int, default=24)
+    ap.add_argument("--rebuild", action="store_true",
+                    help="rebuild-after-failure mode: reconstruct a "
+                         "replaced member and report interference with "
+                         "host I/O")
     ap.add_argument("--quick", action="store_true")
     args = ap.parse_args()
-    if args.devices:
+    if args.rebuild:
+        rebuild_run(args)
+    elif args.devices:
         fleet_run(args)
     else:
         sweep(args.quick)

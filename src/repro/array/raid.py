@@ -325,7 +325,7 @@ class ZNSArray:
         return out
 
     # ------------------------------------------------------------------ #
-    # failure injection
+    # failure injection + rebuild
     # ------------------------------------------------------------------ #
     def fail_device(self, idx: int) -> None:
         if self.geom.parity and len(self.failed) >= 1 and idx not in self.failed:
@@ -335,6 +335,77 @@ class ZNSArray:
 
     def heal_device(self, idx: int) -> None:
         self.failed.discard(idx)
+
+    def _member_chunk(self, zone_id: int, stripe: int, idx: int,
+                      info: SuperZoneInfo) -> int:
+        """Pages member ``idx`` physically wrote for chunk row ``stripe``
+        of ``zone_id`` (its parity chunk, or its data chunk's written
+        prefix), reconstructed from array metadata alone -- the member
+        itself may be gone."""
+        c, k = self.geom.chunk_pages, self.geom.n_data
+        p = self._parity_device(zone_id, stripe)
+        if p == idx:
+            return c if stripe < info.parity_emitted else 0
+        slot = idx if idx < p else idx - 1
+        if slot >= k:
+            return 0
+        start = stripe * c * k + slot * c
+        return max(0, min(c, info.wp - start))
+
+    def rebuild_device(self, idx: int) -> List[TaggedTrace]:
+        """Replace member ``idx`` with a blank device and reconstruct its
+        chunks (data *and* rotated parity) from the survivors.
+
+        For every chunk row the lost member held, the same row is read
+        from each surviving member that wrote it (stripe XOR, exactly the
+        degraded-read access pattern) and the reconstructed chunk is
+        appended to the replacement -- a strictly sequential per-zone
+        stream, so SilentZNS allocation works unchanged underneath.
+        Zones of FULL superzones are FINISHed on the replacement.
+
+        Returns the rebuild's tagged traces (reads on survivors, writes
+        on the replacement) for :func:`repro.core.timing.run_fleet_trace`
+        interference studies; the replacement is installed and the member
+        healed on return.
+        """
+        if not self.geom.parity:
+            raise RuntimeError("rebuild requires parity")
+        if any(f != idx for f in self.failed):
+            raise RuntimeError("cannot rebuild with another member down")
+        old = self.devices[idx]
+        replacement = ZNSDevice(old.flash, old.zone_geom, old.spec,
+                                max_active=old.max_active)
+        c = self.geom.chunk_pages
+        tagged: List[TaggedTrace] = []
+        for z, info in self.zones.items():
+            if info.wp == 0 and info.parity_emitted == 0:
+                continue
+            wrote = 0
+            for s in range(self.stripes_per_zone):
+                pages_here = self._member_chunk(z, s, idx, info)
+                if pages_here <= 0:
+                    continue
+                off = s * c
+                for other in range(self.geom.n_devices):
+                    if other == idx or other in self.failed:
+                        continue
+                    dwp = self.devices[other].zones[z].wp
+                    if dwp <= off:
+                        continue
+                    n_read = min(pages_here, dwp - off)
+                    tr = self.devices[other].zone_read(
+                        z, np.arange(off, off + n_read, dtype=np.int64))
+                    tagged.append((other, tr))
+                tr = replacement.zone_write(z, pages_here, trace=True)
+                tagged.append((idx, tr))
+                wrote += pages_here
+            if info.state is ZoneState.FULL and wrote > 0:
+                tr = replacement.zone_finish(z, trace=True)
+                if tr is not None and len(tr.luns):
+                    tagged.append((idx, tr))
+        self.devices[idx] = replacement
+        self.failed.discard(idx)
+        return tagged
 
     # ------------------------------------------------------------------ #
     # rollups

@@ -8,10 +8,12 @@ from repro.core.elements import (ElementKind, ElementSpec, ElementLayout,
                                  elements_per_zone, groups_per_zone,
                                  is_applicable)
 from repro.core.device import ZNSDevice, ZoneState, ZoneInfo, IOTrace
+from repro.core.engine import (DeviceState, EngineConfig, OpTrace,
+                               ZoneEngine, encode_program)
 from repro.core.backend import ZoneBackend, check_backend
 from repro.core.allocator import (select_lowest_wear, allocate, RoundRobin,
                                   eligible_mask)
-from repro.core import alloc_exact, metrics, timing, workloads, zns
+from repro.core import alloc_exact, engine, metrics, timing, workloads, zns
 
 __all__ = [
     "FlashGeometry", "ZoneGeometry", "zn540", "custom16",
@@ -20,7 +22,9 @@ __all__ = [
     "FIXED", "hchunk", "vchunk", "PAPER_ELEMENTS", "build_layout",
     "elements_per_zone", "groups_per_zone", "is_applicable",
     "ZNSDevice", "ZoneState", "ZoneInfo", "IOTrace",
+    "DeviceState", "EngineConfig", "OpTrace", "ZoneEngine",
+    "encode_program",
     "ZoneBackend", "check_backend",
     "select_lowest_wear", "allocate", "RoundRobin", "eligible_mask",
-    "alloc_exact", "metrics", "timing", "workloads", "zns",
+    "alloc_exact", "engine", "metrics", "timing", "workloads", "zns",
 ]

@@ -1,18 +1,18 @@
-"""The emulated ZNS device: SilentZNS controller + ConfZNS++-style baseline.
+"""The emulated ZNS device: a thin stateful shim over ``repro.core.engine``.
 
-State machine per paper §5 ("Integration with SSD Emulator"):
+State machine per paper §5 ("Integration with SSD Emulator") -- see
+:mod:`repro.core.engine` for the transitions.  Since PR 2 the device's
+*data plane* (wear/avail/pages matrices, zone mapping table, counters)
+lives in a :class:`repro.core.engine.DeviceState` pytree and every
+command dispatches one jit-compiled pure transition; this class only
+keeps a host-side control-plane mirror (zone states/write pointers,
+Python-int counters) so it can raise the legacy ``RuntimeError``s
+eagerly, serve :class:`ZoneInfo` views to hosts like ``ZoneFS``, and
+build ``trace=True`` IO streams without device round-trips.
 
-* **Zone Allocator** -- mapping table zone -> storage elements, built on
-  the first write to a zone; wear-minimizing selection (vectorized JAX /
-  Pallas kernel) with round-robin eligible-LUN windows.  The FIXED element
-  kind reproduces the ConfZNS++ baseline: static physical zones, allocated
-  first-available and *ignoring wear* (paper §6.2).
-* **WRITE/READ** -- striped page placement (see :mod:`repro.core.zns`).
-* **FINISH** -- dummy-pad only partially-written elements; release
-  untouched allocated elements (a=1 -> a=0) back to the pool; written
-  elements become a=2 and stay mapped for reads.
-* **RESET** -- partial + asynchronous: a=2 -> a=3 (erase deferred until the
-  element is re-allocated), a=1 -> a=0; mapping table entry dropped.
+The shim is API- and bit-compatible with the original implementation
+(now :class:`repro.core.device_legacy.LegacyZNSDevice`); the
+differential property tests replay random op sequences through both.
 
 Availability codes: 0 free, 1 allocated-empty, 2 valid, 3 invalid.
 """
@@ -22,17 +22,14 @@ from __future__ import annotations
 import dataclasses
 import enum
 import time
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.core import engine as zengine
 from repro.core import zns
-from repro.core.alloc_exact import (AVAIL_ALLOCATED, AVAIL_FREE,
-                                    AVAIL_INVALID, AVAIL_VALID)
-from repro.core.allocator import RoundRobin, allocate
-from repro.core.elements import (ElementKind, ElementLayout, ElementSpec,
-                                 build_layout, elements_per_zone,
-                                 groups_per_zone)
+from repro.core.alloc_exact import AVAIL_INVALID
+from repro.core.elements import ElementLayout, ElementSpec
 from repro.core.geometry import FlashGeometry, ZoneGeometry
 
 
@@ -60,7 +57,12 @@ class IOTrace:
 
 
 class ZNSDevice:
-    """One emulated ZNS SSD with a pluggable zone-allocation granularity."""
+    """One emulated ZNS SSD with a pluggable zone-allocation granularity.
+
+    A stateful facade: commands are validated against the host-side
+    mirror, executed as pure engine transitions on ``self.state``, and
+    the mirror is refreshed from the returned trace slice.
+    """
 
     def __init__(self,
                  flash: FlashGeometry,
@@ -74,28 +76,27 @@ class ZNSDevice:
         self.zone_geom = zone_geom
         self.spec = spec
         self.max_active = max_active
-        self.alloc_impl = alloc_impl
-        # the ConfZNS++ fixed baseline ignores wear (paper §6.2)
-        self.wear_aware = (spec.kind is not ElementKind.FIXED
-                           if wear_aware is None else wear_aware)
+        self.alloc_impl = alloc_impl  # kept for API compat; engine uses XLA
 
-        self.layout: ElementLayout = build_layout(flash, spec, zone_geom)
-        self.elems_per_zone = elements_per_zone(self.layout, zone_geom)
-        self.zone_groups = groups_per_zone(self.layout, zone_geom)
-        self.take_per_group = self.elems_per_zone // self.zone_groups
-        self.zone_pages = zone_geom.zone_pages(flash)
-        self.n_zones = flash.n_blocks // zone_geom.blocks_per_zone
+        self.engine = zengine.ZoneEngine(
+            flash, zone_geom, spec, max_active=max_active,
+            wear_aware=wear_aware)
+        cfg = self.engine.cfg
+        self.wear_aware = cfg.wear_aware
+        self.layout: ElementLayout = self.engine.layout
+        self.elems_per_zone = cfg.take * cfg.zone_groups
+        self.zone_groups = cfg.zone_groups
+        self.take_per_group = cfg.take
+        self.per_group = cfg.per_group
+        self.zone_pages = cfg.zone_pages
+        self.n_zones = cfg.n_zones
 
-        n = self.layout.n_elements
-        self.per_group = n // self.layout.n_groups
-        self.elem_wear = np.zeros(n, dtype=np.int64)
-        self.elem_avail = np.full(n, AVAIL_FREE, dtype=np.int32)
-        self.elem_pages = np.zeros(n, dtype=np.int64)
-        self.elem_zone = np.full(n, -1, dtype=np.int32)
-        self.zones: Dict[int, ZoneInfo] = {z: ZoneInfo() for z in range(self.n_zones)}
-        self.rr = RoundRobin(self.layout.n_groups, self.zone_groups)
+        self.state: zengine.DeviceState = self.engine.init_state()
+        self.zones: Dict[int, ZoneInfo] = {
+            z: ZoneInfo() for z in range(self.n_zones)}
 
-        # counters
+        # counters (host-side mirrors of the pytree scalars, as Python
+        # ints so long workloads can't overflow int32)
         self.host_pages = 0
         self.dummy_pages = 0
         self.block_erases = 0
@@ -114,14 +115,33 @@ class ZNSDevice:
 
     @property
     def n_active(self) -> int:
-        return sum(1 for z in self.zones.values() if z.state is ZoneState.OPEN)
+        return sum(1 for z in self.zones.values()
+                   if z.state is ZoneState.OPEN)
+
+    # element-state views (numpy copies of the pytree data plane)
+    @property
+    def elem_wear(self) -> np.ndarray:
+        return np.asarray(
+            self.state.elem_wear[: self.layout.n_elements], dtype=np.int64)
+
+    @property
+    def elem_avail(self) -> np.ndarray:
+        return np.asarray(
+            self.state.elem_avail[: self.layout.n_elements], dtype=np.int32)
+
+    @property
+    def elem_pages(self) -> np.ndarray:
+        return np.asarray(
+            self.state.elem_pages[: self.layout.n_elements], dtype=np.int64)
+
+    @property
+    def elem_zone(self) -> np.ndarray:
+        return np.asarray(
+            self.state.elem_zone[: self.layout.n_elements], dtype=np.int32)
 
     def block_wear(self) -> np.ndarray:
         """Per erase-block wear (all blocks of an element share wear)."""
-        wear = np.zeros(self.flash.n_blocks, dtype=np.int64)
-        wear[self.layout.blocks.reshape(-1)] = np.repeat(
-            self.elem_wear, self.layout.blocks_per_element)
-        return wear
+        return self.engine.block_wear(self.state)
 
     def pending_erases(self) -> int:
         """Block erases implied by a=3 elements not yet re-allocated."""
@@ -129,146 +149,42 @@ class ZNSDevice:
         return int(inv.sum()) * self.layout.blocks_per_element
 
     # ------------------------------------------------------------------ #
-    # allocation (paper §5)
+    # engine dispatch + mirror upkeep
     # ------------------------------------------------------------------ #
-    def _wear2d(self) -> np.ndarray:
-        return self.elem_wear.reshape(self.layout.n_groups, self.per_group)
-
-    def _avail2d(self) -> np.ndarray:
-        return self.elem_avail.reshape(self.layout.n_groups, self.per_group)
+    def _dispatch(self, op: int, zone_id: int, n_pages: int = 0,
+                  host: bool = True) -> zengine.OpTrace:
+        self.state, tr = self.engine.apply(
+            self.state,
+            (op, zone_id, n_pages, zengine.F_HOST if host else 0))
+        return tr
 
     def _allocate_zone(self, zone_id: int) -> None:
-        info = self.zones[zone_id]
         if self.n_active >= self.max_active:
             raise RuntimeError(
                 f"open/active zone limit ({self.max_active}) reached")
-
         t0 = time.perf_counter()
-        if self.spec.kind is ElementKind.FIXED:
-            sel_ids = self._allocate_fixed()  # shape (1,): one static zone
-            window_groups = np.asarray(
-                [self.layout.group[int(sel_ids[0])]], dtype=np.int64)
-        else:
-            eligible = self.rr.next_window()
-            if self.wear_aware:
-                sel, feasible = allocate(self._wear2d(), self._avail2d(),
-                                         eligible, self.take_per_group,
-                                         impl=self.alloc_impl)
-            else:
-                sel, feasible = self._first_available(eligible)
-            if not feasible:
-                # round-robin window exhausted: activate the cheapest
-                # feasible groups instead (ILP with L_min = zone_groups --
-                # optimal group choice = smallest sum of take-lowest wears)
-                eligible = self._cheapest_groups()
-                sel, feasible = allocate(self._wear2d(), self._avail2d(),
-                                         eligible, self.take_per_group,
-                                         impl=self.alloc_impl)
-            if not feasible:
-                raise RuntimeError("no free storage elements for zone "
-                                   f"{zone_id} ({self.spec.name})")
-            sel2d = sel.reshape(self.layout.n_groups, self.per_group)
-            window_groups = np.nonzero(sel2d.any(axis=1))[0]
-            sel_ids = self._arrange(sel2d, window_groups)
-        self.alloc_calls += 1
+        tr = self._dispatch(zengine.OP_ALLOC, zone_id)
+        ok = bool(tr.ok)  # blocks until the transition is done
         dt = time.perf_counter() - t0
+        if not ok:
+            raise RuntimeError("no free storage elements for zone "
+                               f"{zone_id} ({self.spec.name})")
+        self.alloc_calls += 1
         self.alloc_seconds += dt
         self.alloc_latencies_us.append(dt * 1e6)
-
-        flat = sel_ids.reshape(-1)
-        # deferred physical erase of invalid elements (paper §5 RESET)
-        invalid = flat[self.elem_avail[flat] == AVAIL_INVALID]
-        if invalid.size:
-            self.elem_wear[invalid] += 1
-            self.block_erases += invalid.size * self.layout.blocks_per_element
-        self.elem_avail[flat] = AVAIL_ALLOCATED
-        self.elem_pages[flat] = 0
-        self.elem_zone[flat] = zone_id
-
-        info.elements = sel_ids
-        info.column_luns = self._column_luns(window_groups)
+        self.block_erases += int(tr.erase_delta)
+        info = self.zones[zone_id]
+        info.elements = np.asarray(tr.elems, dtype=np.int64)
+        info.column_luns = np.asarray(tr.cols, dtype=np.int64)
         info.state = ZoneState.OPEN
         info.wp = 0
         info.host_wp = 0
 
-    def _cheapest_groups(self) -> np.ndarray:
-        """Pick the ``zone_groups`` groups minimizing the sum of their
-        ``take`` lowest available wears (exact for the balanced ILP)."""
-        wear2d = self._wear2d().astype(np.float64)
-        avail2d = self._avail2d()
-        ok = (avail2d == AVAIL_FREE) | (avail2d == AVAIL_INVALID)
-        keyed = np.where(ok, wear2d, np.inf)
-        part = np.sort(keyed, axis=1)[:, : self.take_per_group]
-        cost = part.sum(axis=1)  # inf when < take available
-        order = np.argsort(cost, kind="stable")[: self.zone_groups]
-        mask = np.zeros(self.layout.n_groups, dtype=bool)
-        mask[order] = True
-        return mask
-
-    def _first_available(self, eligible: np.ndarray
-                         ) -> Tuple[np.ndarray, bool]:
-        """Wear-oblivious first-fit (baseline allocation policy)."""
-        avail2d = self._avail2d()
-        ok = ((avail2d == AVAIL_FREE) | (avail2d == AVAIL_INVALID))
-        ok &= eligible[:, None]
-        idx = np.argsort(~ok, axis=1, kind="stable")  # available first
-        ranks = np.argsort(idx, axis=1, kind="stable")
-        sel = ok & (ranks < self.take_per_group)
-        feasible = bool(np.all(np.where(
-            eligible, ok.sum(axis=1) >= self.take_per_group, True)))
-        return sel, feasible
-
-    def _allocate_fixed(self) -> np.ndarray:
-        ok = np.isin(self.elem_avail, (AVAIL_FREE, AVAIL_INVALID))
-        ids = np.nonzero(ok)[0]
-        if not ids.size:
-            raise RuntimeError("no free physical zone (fixed mapping)")
-        if self.wear_aware:
-            e = ids[np.argmin(self.elem_wear[ids])]
-        else:
-            e = ids[0]
-        return np.asarray([e], dtype=np.int64)
-
-    def _arrange(self, sel2d: np.ndarray, window_groups: np.ndarray
-                 ) -> np.ndarray:
-        """Order selected elements into zone slots (see zns.py ordering).
-
-        Returns (n_slots,) element ids; within each group, selected
-        elements are ranked by wear and assigned to segments bottom-up.
-        """
-        n_slots = zns.n_slots(self.spec, self.zone_geom.parallelism,
-                              self.zone_geom.n_segments)
-        out = np.full(n_slots, -1, dtype=np.int64)
-        for c, g in enumerate(window_groups):
-            cols = np.nonzero(sel2d[g])[0]
-            ids = g * self.per_group + cols
-            order = np.argsort(self.elem_wear[ids], kind="stable")
-            for rank, eid in enumerate(ids[order]):
-                slot = zns.slot_of_group_rank(
-                    self.spec, self.zone_geom.parallelism,
-                    self.zone_geom.n_segments, c, rank)
-                out[slot] = eid
-        assert (out >= 0).all(), "zone slot assignment incomplete"
-        return out
-
-    def _column_luns(self, window_groups: np.ndarray) -> np.ndarray:
-        """Zone column -> LUN id, from the groups that won the allocation.
-
-        FIXED-zone column convention: a static physical zone is pinned to
-        ``parallelism`` *adjacent* LUNs starting at ``group * parallelism``
-        (its erase blocks are laid out contiguously, so the winning group
-        index alone determines every column).  Dynamic elements instead
-        contribute ``luns_per_group`` columns per winning group.
-        """
-        s = self.layout.luns_per_group
-        luns = []
-        for g in window_groups:
-            if self.spec.kind is ElementKind.FIXED:
-                base = int(g) * self.zone_geom.parallelism
-                luns.extend(range(base, base + self.zone_geom.parallelism))
-            else:
-                luns.extend(range(int(g) * s, int(g) * s + s))
-        return np.asarray(luns[: self.zone_geom.parallelism], dtype=np.int64)
+    def warmup_alloc(self) -> None:
+        """Compile every engine transition on a scratch state so timed
+        allocation samples exclude jit compilation (paper Table 4
+        methodology)."""
+        self.engine.warmup()
 
     # ------------------------------------------------------------------ #
     # ZNS commands
@@ -285,6 +201,7 @@ class ZNSDevice:
             raise RuntimeError(
                 f"zone {zone_id} overflow: wp={info.wp} + {n_pages} "
                 f"> {self.zone_pages}")
+        self._dispatch(zengine.OP_WRITE, zone_id, n_pages, host=host)
         start = info.wp
         info.wp += n_pages
         if host:
@@ -292,9 +209,8 @@ class ZNSDevice:
             self.host_pages += n_pages
         else:
             self.dummy_pages += n_pages
-        self._refresh_element_pages(info)
         if info.wp == self.zone_pages:
-            self._seal(info)
+            info.state = ZoneState.FULL
         if trace:
             luns, chans = zns.page_stream(
                 start, n_pages, self.zone_geom.parallelism,
@@ -323,39 +239,25 @@ class ZNSDevice:
         if info.state is ZoneState.FULL:
             return None
         if info.state is ZoneState.EMPTY:
+            self._dispatch(zengine.OP_FINISH, zone_id)
             info.state = ZoneState.FULL  # finishing an empty zone is a no-op
             return None
-        written = zns.element_pages(
-            info.wp, self.spec, self.zone_geom.parallelism,
-            self.zone_geom.n_segments, self.flash.pages_per_block)
-        cap = self.layout.pages_per_element
-        elems = info.elements
-        padded_slots: List[int] = []
-
-        for slot, eid in enumerate(elems):
-            if eid < 0:
-                continue
-            w = int(written[slot])
-            if w == 0:
-                # untouched: release back to the pool (a=1 -> a=0)
-                self.elem_avail[eid] = AVAIL_FREE
-                self.elem_zone[eid] = -1
-                self.elem_pages[eid] = 0
-                info.elements[slot] = -1
-            else:
-                pad = cap - w
-                if pad:
-                    self.dummy_pages += pad
-                    padded_slots.append(slot)
-                self.elem_pages[eid] = cap
-                self.elem_avail[eid] = AVAIL_VALID
         wp_at_finish = info.wp
-        self._seal(info)
+        tr = self._dispatch(zengine.OP_FINISH, zone_id)
+        self.dummy_pages += int(tr.dummy_delta)
+        info.elements = np.asarray(tr.elems, dtype=np.int64)
+        info.state = ZoneState.FULL
         if trace:
+            written = zns.element_pages(
+                wp_at_finish, self.spec, self.zone_geom.parallelism,
+                self.zone_geom.n_segments, self.flash.pages_per_block)
+            padded_slots = np.nonzero(
+                (info.elements >= 0) & (written > 0)
+                & (written < self.layout.pages_per_element))[0]
             luns, chans = zns.pad_stream(
                 wp_at_finish, self.zone_pages, self.spec,
                 self.zone_geom.parallelism, self.flash.pages_per_block,
-                info.column_luns, np.asarray(padded_slots, dtype=np.int64),
+                info.column_luns, padded_slots.astype(np.int64),
                 self.flash.n_channels)
             return IOTrace(luns, chans, "write")
         return None
@@ -363,36 +265,8 @@ class ZNSDevice:
     def zone_reset(self, zone_id: int) -> None:
         """Partial + asynchronous RESET (paper §5): invalidate metadata,
         defer physical erase to re-allocation."""
-        info = self.zones[zone_id]
-        if info.elements is not None:
-            for eid in info.elements:
-                if eid < 0:
-                    continue
-                if self.elem_avail[eid] == AVAIL_VALID:
-                    self.elem_avail[eid] = AVAIL_INVALID
-                elif self.elem_avail[eid] == AVAIL_ALLOCATED:
-                    self.elem_avail[eid] = AVAIL_FREE
-                self.elem_zone[eid] = -1
-                self.elem_pages[eid] = 0
+        self._dispatch(zengine.OP_RESET, zone_id)
         self.zones[zone_id] = ZoneInfo()
-
-    # ------------------------------------------------------------------ #
-    # helpers
-    # ------------------------------------------------------------------ #
-    def _seal(self, info: ZoneInfo) -> None:
-        info.state = ZoneState.FULL
-
-    def _refresh_element_pages(self, info: ZoneInfo) -> None:
-        written = zns.element_pages(
-            info.wp, self.spec, self.zone_geom.parallelism,
-            self.zone_geom.n_segments, self.flash.pages_per_block)
-        elems = info.elements
-        valid = elems >= 0
-        self.elem_pages[elems[valid]] = written[valid]
-        # first host byte into an element transitions it a=1 -> a=2? The
-        # paper marks written elements valid at WRITE time (§5 READ/WRITE).
-        touched = valid & (written > 0)
-        self.elem_avail[elems[touched]] = AVAIL_VALID
 
     def median_alloc_latency_us(self) -> float:
         if not self.alloc_latencies_us:

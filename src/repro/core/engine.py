@@ -1,0 +1,608 @@
+"""ZoneEngine: the device state machine as a pure pytree + scan programs.
+
+The legacy :class:`repro.core.device_legacy.LegacyZNSDevice` executes every
+WRITE/FINISH/RESET as a stateful Python call with a host->JAX round-trip
+per allocation.  This module inverts that ownership: **all** device state
+lives in a :class:`DeviceState` pytree of ``jnp`` arrays, and every zone
+command is a pure jit-compiled transition
+
+    apply_op(state, op_row) -> (state, OpTrace)
+
+so an encoded ``(n_ops, 4)`` int32 *op program* runs in a single
+``lax.scan`` (:func:`run_program`) with no per-op host round-trips, and a
+batch of programs (e.g. a DLWA occupancy sweep) runs in one vmapped scan
+(:func:`run_programs`).  Semantics are bit-exact with the legacy device --
+the differential property tests in ``tests/test_engine_diff.py`` replay
+random op sequences through both.
+
+Op encoding (all int32): ``[opcode, zone, n_pages, flags]`` with flags
+bit0 = host write (0 -> dummy/device-internal write).  Illegal ops (FULL
+write, overflow, allocation failure, active-zone limit) never raise: they
+apply exactly the partial effects the legacy device leaves behind after
+its ``RuntimeError`` (e.g. an overflowing write still opens the zone) and
+report ``ok=0`` in the trace.
+
+Static configuration is a frozen hashable :class:`EngineConfig`, so the
+jitted transitions are compile-cached *per device geometry/spec*, not per
+engine instance.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import zns
+from repro.core.alloc_exact import (AVAIL_ALLOCATED, AVAIL_FREE,
+                                    AVAIL_INVALID, AVAIL_VALID)
+from repro.core.elements import (ElementKind, ElementLayout, ElementSpec,
+                                 build_layout, elements_per_zone,
+                                 groups_per_zone)
+from repro.core.geometry import FlashGeometry, ZoneGeometry
+
+# ----------------------------------------------------------------------- #
+# op + zone-state encodings
+# ----------------------------------------------------------------------- #
+OP_NOP, OP_ALLOC, OP_WRITE, OP_FINISH, OP_RESET, OP_READ = range(6)
+F_HOST = 1  # flags bit0: host (vs dummy) write
+
+ZONE_EMPTY, ZONE_OPEN, ZONE_FULL = 0, 1, 2
+
+_BIG = 2**30  # sentinel wear for unavailable slots (matches allocator.py)
+
+
+# ----------------------------------------------------------------------- #
+# static config + state pytree
+# ----------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Hashable static description of one device geometry/element spec."""
+
+    kind: ElementKind
+    chunk: int
+    wear_aware: bool
+    n_elements: int
+    n_groups: int
+    per_group: int
+    luns_per_group: int
+    take: int            # elements taken per winning group
+    zone_groups: int     # winning groups per zone
+    slot_stride: int     # slot = rank * slot_stride + window_position
+    n_slots: int
+    parallelism: int
+    n_segments: int
+    pages_per_block: int
+    zone_pages: int
+    pages_per_element: int
+    blocks_per_element: int
+    n_zones: int
+    max_active: int
+    n_channels: int
+
+    @property
+    def spec(self) -> ElementSpec:
+        return ElementSpec(self.kind, self.chunk)
+
+
+class DeviceState(NamedTuple):
+    """The whole device as a pytree.  Element arrays carry one trailing
+    *scratch* slot (index ``n_elements``) absorbing masked scatters."""
+
+    elem_wear: jax.Array    # (n_elements + 1,) i32
+    elem_avail: jax.Array   # (n_elements + 1,) i32
+    elem_pages: jax.Array   # (n_elements + 1,) i32
+    elem_zone: jax.Array    # (n_elements + 1,) i32
+    zone_state: jax.Array   # (n_zones,) i32
+    zone_wp: jax.Array      # (n_zones,) i32
+    zone_host_wp: jax.Array  # (n_zones,) i32
+    zone_elems: jax.Array   # (n_zones, n_slots) i32, -1 = unmapped/released
+    zone_cols: jax.Array    # (n_zones, parallelism) i32 zone column -> LUN
+    rr_next: jax.Array      # () i32 round-robin window start
+    n_active: jax.Array     # () i32 OPEN zone count
+    host_pages: jax.Array   # () i32
+    dummy_pages: jax.Array  # () i32
+    block_erases: jax.Array  # () i32
+    alloc_calls: jax.Array  # () i32
+
+
+class OpTrace(NamedTuple):
+    """Per-op trace slice: enough to rebuild IO streams host-side."""
+
+    op: jax.Array          # () i32
+    zone: jax.Array        # () i32
+    ok: jax.Array          # () bool
+    wp_before: jax.Array   # () i32
+    wp_after: jax.Array    # () i32
+    host_delta: jax.Array  # () i32
+    dummy_delta: jax.Array  # () i32
+    erase_delta: jax.Array  # () i32
+    elems: jax.Array       # (n_slots,) i32  zone slot row *after* the op
+    cols: jax.Array        # (parallelism,) i32 zone column -> LUN
+
+
+def _slot_stride(spec: ElementSpec, parallelism: int) -> int:
+    if spec.kind is ElementKind.BLOCK:
+        return parallelism
+    if spec.kind is ElementKind.VCHUNK:
+        return parallelism // spec.chunk
+    if spec.kind is ElementKind.SUPERBLOCK:
+        return 1
+    if spec.kind is ElementKind.HCHUNK:
+        return parallelism
+    if spec.kind is ElementKind.FIXED:
+        return 1
+    raise ValueError(spec.kind)
+
+
+def make_config(flash: FlashGeometry, zone_geom: ZoneGeometry,
+                spec: ElementSpec, *, max_active: int = 14,
+                wear_aware: Optional[bool] = None
+                ) -> Tuple[EngineConfig, ElementLayout]:
+    layout = build_layout(flash, spec, zone_geom)
+    elems = elements_per_zone(layout, zone_geom)
+    zgroups = groups_per_zone(layout, zone_geom)
+    cfg = EngineConfig(
+        kind=spec.kind,
+        chunk=spec.chunk,
+        wear_aware=(spec.kind is not ElementKind.FIXED
+                    if wear_aware is None else wear_aware),
+        n_elements=layout.n_elements,
+        n_groups=layout.n_groups,
+        per_group=layout.n_elements // layout.n_groups,
+        luns_per_group=layout.luns_per_group,
+        take=elems // zgroups,
+        zone_groups=zgroups,
+        slot_stride=_slot_stride(spec, zone_geom.parallelism),
+        n_slots=zns.n_slots(spec, zone_geom.parallelism,
+                            zone_geom.n_segments),
+        parallelism=zone_geom.parallelism,
+        n_segments=zone_geom.n_segments,
+        pages_per_block=flash.pages_per_block,
+        zone_pages=zone_geom.zone_pages(flash),
+        pages_per_element=layout.pages_per_element,
+        blocks_per_element=layout.blocks_per_element,
+        n_zones=flash.n_blocks // zone_geom.blocks_per_zone,
+        max_active=max_active,
+        n_channels=flash.n_channels,
+    )
+    return cfg, layout
+
+
+def init_state(cfg: EngineConfig) -> DeviceState:
+    n = cfg.n_elements + 1  # + scratch slot
+    i32 = jnp.int32
+    return DeviceState(
+        elem_wear=jnp.zeros(n, i32),
+        elem_avail=jnp.full(n, AVAIL_FREE, i32),
+        elem_pages=jnp.zeros(n, i32),
+        elem_zone=jnp.full(n, -1, i32),
+        zone_state=jnp.full(cfg.n_zones, ZONE_EMPTY, i32),
+        zone_wp=jnp.zeros(cfg.n_zones, i32),
+        zone_host_wp=jnp.zeros(cfg.n_zones, i32),
+        zone_elems=jnp.full((cfg.n_zones, cfg.n_slots), -1, i32),
+        zone_cols=jnp.zeros((cfg.n_zones, cfg.parallelism), i32),
+        rr_next=jnp.zeros((), i32),
+        n_active=jnp.zeros((), i32),
+        host_pages=jnp.zeros((), i32),
+        dummy_pages=jnp.zeros((), i32),
+        block_erases=jnp.zeros((), i32),
+        alloc_calls=jnp.zeros((), i32),
+    )
+
+
+# ----------------------------------------------------------------------- #
+# pure selection helpers (bit-exact with allocator.py / device_legacy.py)
+# ----------------------------------------------------------------------- #
+def _rr_mask(cfg: EngineConfig, start: jax.Array) -> jax.Array:
+    idx = (start + jnp.arange(cfg.zone_groups, dtype=jnp.int32)) % cfg.n_groups
+    return jnp.zeros(cfg.n_groups, bool).at[idx].set(True)
+
+
+def _take_lowest(cfg: EngineConfig, w2, a2, eligible, by_wear: bool):
+    """Per-eligible-group ``take`` lowest-(wear, col) available elements.
+
+    One ``top_k`` over the unique composite key ``wear * per_group + col``
+    reproduces the legacy stable argsort selection *and* its arrange
+    order (within a group, selected elements ranked by wear then column)
+    without full sorts -- the scan's hot path.  ``by_wear=False`` is the
+    wear-oblivious first-fit (key = column alone).
+
+    Returns (cols (n_groups, take) ordered ascending by key, feasible).
+    Valid only where ``eligible``; overflow-safe while wear stays below
+    ``2**30 / per_group`` (far beyond any simulated churn).
+    """
+    free = (a2 == AVAIL_FREE) | (a2 == AVAIL_INVALID)
+    free = free & eligible[:, None]
+    col = jnp.arange(cfg.per_group, dtype=jnp.int32)[None, :]
+    key = (w2 * cfg.per_group + col) if by_wear else col
+    key = jnp.where(free, key, _BIG)
+    negv, cols = jax.lax.top_k(-key, cfg.take)
+    got_all = (-negv[:, -1]) < _BIG  # take-th smallest is a real element
+    feasible = jnp.all(got_all | ~eligible)
+    cols = cols.astype(jnp.int32)
+    if not by_wear:
+        # selection is first-fit by column, but the legacy ``_arrange``
+        # still ranks the selected elements by (wear, col) when
+        # assigning them to zone slots -- reorder to match
+        sel_key = jnp.take_along_axis(w2, cols, axis=1) * cfg.per_group + cols
+        order = jnp.argsort(sel_key, axis=1, stable=True)
+        cols = jnp.take_along_axis(cols, order, axis=1)
+    return cols, feasible
+
+
+def _cheapest_groups(cfg: EngineConfig, w2, a2) -> jax.Array:
+    ok = (a2 == AVAIL_FREE) | (a2 == AVAIL_INVALID)
+    keyed = jnp.where(ok, w2.astype(jnp.float32), jnp.inf)
+    part = -jax.lax.top_k(-keyed, cfg.take)[0]  # take smallest per row
+    cost = part.sum(axis=1)  # inf when < take available
+    order = jnp.argsort(cost, stable=True)[: cfg.zone_groups]
+    return jnp.zeros(cfg.n_groups, bool).at[order].set(True)
+
+
+def _where_state(pred, new: DeviceState, old: DeviceState) -> DeviceState:
+    return jax.tree_util.tree_map(
+        lambda a, b: jnp.where(pred, a, b), new, old)
+
+
+# ----------------------------------------------------------------------- #
+# transitions
+# ----------------------------------------------------------------------- #
+def _alloc(cfg: EngineConfig, state: DeviceState, zone: jax.Array
+           ) -> Tuple[DeviceState, jax.Array]:
+    """ALLOC a zone's elements (legacy ``_allocate_zone``).  Caller guards
+    on the zone being EMPTY; this applies the selection + deferred erase."""
+    n = cfg.n_elements
+    limit_ok = state.n_active < cfg.max_active
+
+    if cfg.kind is ElementKind.FIXED:
+        wear = state.elem_wear[:n]
+        avail = state.elem_avail[:n]
+        free = (avail == AVAIL_FREE) | (avail == AVAIL_INVALID)
+        key = jnp.where(
+            free,
+            wear if cfg.wear_aware else jnp.arange(n, dtype=jnp.int32),
+            _BIG)
+        e = jnp.argmin(key).astype(jnp.int32)
+        feasible = free.any()
+        band = e % cfg.n_groups
+        cols_row = (band * cfg.parallelism
+                    + jnp.arange(cfg.parallelism, dtype=jnp.int32))
+        elems_row = jnp.full((cfg.n_slots,), e, jnp.int32)
+        rr_next = state.rr_next
+    else:
+        pg = cfg.per_group
+        w2 = state.elem_wear[:n].reshape(cfg.n_groups, pg)
+        a2 = state.elem_avail[:n].reshape(cfg.n_groups, pg)
+        elig1 = _rr_mask(cfg, state.rr_next)
+        cols1, f1 = _take_lowest(cfg, w2, a2, elig1, cfg.wear_aware)
+
+        # round-robin window exhausted: cheapest feasible groups instead
+        # (the legacy fallback always uses the wear-aware selection);
+        # lazily computed -- the common path pays for one top_k only
+        def fallback(_):
+            elig2 = _cheapest_groups(cfg, w2, a2)
+            cols2, f2 = _take_lowest(cfg, w2, a2, elig2, True)
+            return cols2, f2, elig2
+
+        cols, f2, elig = jax.lax.cond(
+            f1, lambda _: (cols1, f1, elig1), fallback, None)
+        feasible = f1 | f2
+        # every eligible group contributes exactly ``take`` elements, so
+        # the winning groups are the eligible window itself (ascending)
+        win = jnp.nonzero(elig, size=cfg.zone_groups,
+                          fill_value=0)[0].astype(jnp.int32)
+        eids = (win[:, None] * pg + cols[win]).astype(jnp.int32)
+        ranks = jnp.arange(cfg.take, dtype=jnp.int32)[None, :]
+        cpos = jnp.arange(cfg.zone_groups, dtype=jnp.int32)[:, None]
+        slots = (ranks * cfg.slot_stride + cpos).reshape(-1)
+        elems_row = jnp.zeros(cfg.n_slots, jnp.int32).at[slots].set(
+            eids.reshape(-1))
+        lpg = cfg.luns_per_group
+        cols_row = (win[:, None] * lpg
+                    + jnp.arange(lpg, dtype=jnp.int32)[None, :]
+                    ).reshape(-1)[: cfg.parallelism]
+        # legacy advances the window even when the allocation then fails
+        rr_next = (state.rr_next + cfg.zone_groups) % cfg.n_groups
+
+    ok = limit_ok & feasible
+    # deferred physical erase of invalid elements (paper §5 RESET)
+    flat = elems_row.reshape(-1)
+    inv = state.elem_avail[flat] == AVAIL_INVALID
+    erase_delta = inv.sum().astype(jnp.int32) * cfg.blocks_per_element
+    new = state._replace(
+        elem_wear=state.elem_wear.at[flat].add(inv.astype(jnp.int32)),
+        elem_avail=state.elem_avail.at[flat].set(AVAIL_ALLOCATED),
+        elem_pages=state.elem_pages.at[flat].set(0),
+        elem_zone=state.elem_zone.at[flat].set(zone),
+        zone_state=state.zone_state.at[zone].set(ZONE_OPEN),
+        zone_wp=state.zone_wp.at[zone].set(0),
+        zone_host_wp=state.zone_host_wp.at[zone].set(0),
+        zone_elems=state.zone_elems.at[zone].set(elems_row),
+        zone_cols=state.zone_cols.at[zone].set(cols_row),
+        n_active=state.n_active + 1,
+        block_erases=state.block_erases + erase_delta,
+        alloc_calls=state.alloc_calls + 1,
+    )
+    state = _where_state(ok, new, state)
+    # rr advance survives an infeasible attempt (but not a limit refusal,
+    # where the legacy device raises before touching the window)
+    state = state._replace(
+        rr_next=jnp.where(limit_ok, rr_next, state.rr_next))
+    return state, ok
+
+
+def _written_per_slot(cfg: EngineConfig, wp: jax.Array) -> jax.Array:
+    return zns.element_pages_jnp(wp, cfg.spec, cfg.parallelism,
+                                 cfg.n_segments, cfg.pages_per_block)
+
+
+def _write(cfg: EngineConfig, state: DeviceState, zone, n_pages, host
+           ) -> Tuple[DeviceState, jax.Array]:
+    zst0 = state.zone_state[zone]
+    state, aok = jax.lax.cond(
+        zst0 == ZONE_EMPTY,
+        lambda s: _alloc(cfg, s, zone),
+        lambda s: (s, jnp.asarray(True)),
+        state)
+    wp0 = state.zone_wp[zone]
+    wp1 = wp0 + n_pages
+    ok = (zst0 != ZONE_FULL) & aok & (wp1 <= cfg.zone_pages)
+
+    written = _written_per_slot(cfg, wp1).astype(jnp.int32)
+    elems = state.zone_elems[zone]
+    valid = elems >= 0
+    idx = jnp.where(valid, elems, cfg.n_elements)
+    touched = valid & (written > 0)
+    seal = wp1 == cfg.zone_pages
+    new = state._replace(
+        elem_pages=state.elem_pages.at[idx].set(written),
+        elem_avail=state.elem_avail.at[
+            jnp.where(touched, elems, cfg.n_elements)].set(AVAIL_VALID),
+        zone_wp=state.zone_wp.at[zone].set(wp1),
+        zone_host_wp=state.zone_host_wp.at[zone].add(
+            jnp.where(host, n_pages, 0)),
+        zone_state=state.zone_state.at[zone].set(
+            jnp.where(seal, ZONE_FULL, ZONE_OPEN)),
+        n_active=state.n_active - seal.astype(jnp.int32),
+        host_pages=state.host_pages + jnp.where(host, n_pages, 0),
+        dummy_pages=state.dummy_pages + jnp.where(host, 0, n_pages),
+    )
+    return _where_state(ok, new, state), ok
+
+
+def _finish(cfg: EngineConfig, state: DeviceState, zone
+            ) -> Tuple[DeviceState, jax.Array]:
+    zst0 = state.zone_state[zone]
+    is_open = zst0 == ZONE_OPEN
+    wp = state.zone_wp[zone]
+    written = _written_per_slot(cfg, wp).astype(jnp.int32)
+    elems = state.zone_elems[zone]
+    valid = elems >= 0
+    untouched = valid & (written == 0) & is_open
+    touched = valid & (written > 0) & is_open
+    cap = cfg.pages_per_element
+    pad = jnp.sum(jnp.where(touched, cap - written, 0)).astype(jnp.int32)
+    n = cfg.n_elements
+    u_idx = jnp.where(untouched, elems, n)
+    t_idx = jnp.where(touched, elems, n)
+    avail = state.elem_avail.at[u_idx].set(AVAIL_FREE)
+    avail = avail.at[t_idx].set(AVAIL_VALID)
+    pages = state.elem_pages.at[u_idx].set(0)
+    pages = pages.at[t_idx].set(cap)
+    new = state._replace(
+        elem_avail=avail,
+        elem_pages=pages,
+        elem_zone=state.elem_zone.at[u_idx].set(-1),
+        zone_elems=state.zone_elems.at[zone].set(
+            jnp.where(untouched, -1, elems)),
+        zone_state=state.zone_state.at[zone].set(ZONE_FULL),
+        dummy_pages=state.dummy_pages + pad,
+        n_active=state.n_active - is_open.astype(jnp.int32),
+    )
+    # FULL is a no-op; EMPTY just seals (untouched/touched masks are empty)
+    return _where_state(zst0 != ZONE_FULL, new, state), jnp.asarray(True)
+
+
+def _reset(cfg: EngineConfig, state: DeviceState, zone
+           ) -> Tuple[DeviceState, jax.Array]:
+    zst0 = state.zone_state[zone]
+    elems = state.zone_elems[zone]
+    valid = elems >= 0
+    idx = jnp.where(valid, elems, cfg.n_elements)
+    cur = state.elem_avail[idx]
+    nxt = jnp.where(cur == AVAIL_VALID, AVAIL_INVALID,
+                    jnp.where(cur == AVAIL_ALLOCATED, AVAIL_FREE, cur))
+    new = state._replace(
+        elem_avail=state.elem_avail.at[idx].set(nxt),
+        elem_zone=state.elem_zone.at[idx].set(-1),
+        elem_pages=state.elem_pages.at[idx].set(0),
+        zone_state=state.zone_state.at[zone].set(ZONE_EMPTY),
+        zone_wp=state.zone_wp.at[zone].set(0),
+        zone_host_wp=state.zone_host_wp.at[zone].set(0),
+        zone_elems=state.zone_elems.at[zone].set(
+            jnp.full(cfg.n_slots, -1, jnp.int32)),
+        zone_cols=state.zone_cols.at[zone].set(
+            jnp.zeros(cfg.parallelism, jnp.int32)),
+        n_active=state.n_active - (zst0 == ZONE_OPEN).astype(jnp.int32),
+    )
+    return new, jnp.asarray(True)
+
+
+# ----------------------------------------------------------------------- #
+# op dispatch + program executor
+# ----------------------------------------------------------------------- #
+def _apply_op_impl(cfg: EngineConfig, state: DeviceState, row: jax.Array
+                   ) -> Tuple[DeviceState, OpTrace]:
+    op = row[0]
+    zone = jnp.clip(row[1], 0, cfg.n_zones - 1)
+    n_pages = row[2]
+    host = (row[3] & F_HOST) == F_HOST
+
+    def nop(s):
+        return s, jnp.asarray(True)
+
+    def alloc_branch(s):
+        zst0 = s.zone_state[zone]
+        s2, ok = _alloc(cfg, s, zone)
+        # no-op (and fine) when the zone is already mapped
+        return (_where_state(zst0 == ZONE_EMPTY, s2, s),
+                jnp.where(zst0 == ZONE_EMPTY, ok, True))
+
+    state2, ok = jax.lax.switch(
+        jnp.clip(op, 0, OP_READ),
+        [nop,
+         alloc_branch,
+         lambda s: _write(cfg, s, zone, n_pages, host),
+         lambda s: _finish(cfg, s, zone),
+         lambda s: _reset(cfg, s, zone),
+         nop],  # OP_READ: reads never change device state
+        state)
+    trace = OpTrace(
+        op=op, zone=zone, ok=ok,
+        wp_before=state.zone_wp[zone],
+        wp_after=state2.zone_wp[zone],
+        host_delta=state2.host_pages - state.host_pages,
+        dummy_delta=state2.dummy_pages - state.dummy_pages,
+        erase_delta=state2.block_erases - state.block_erases,
+        elems=state2.zone_elems[zone],
+        cols=state2.zone_cols[zone],
+    )
+    return state2, trace
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def apply_op(cfg: EngineConfig, state: DeviceState, row: jax.Array
+             ) -> Tuple[DeviceState, OpTrace]:
+    """One zone command as a pure jitted transition."""
+    return _apply_op_impl(cfg, state, row)
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def run_program(cfg: EngineConfig, state: DeviceState, program: jax.Array
+                ) -> Tuple[DeviceState, OpTrace]:
+    """Execute an ``(n_ops, 4)`` int32 program in a single ``lax.scan``."""
+    return jax.lax.scan(
+        lambda s, r: _apply_op_impl(cfg, s, r), state, program)
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def run_programs(cfg: EngineConfig, state: DeviceState, programs: jax.Array
+                 ) -> Tuple[DeviceState, OpTrace]:
+    """Batch :func:`run_program` over a leading program axis (shared
+    initial state) -- a whole parameter sweep in one compiled dispatch.
+
+    Uses ``lax.map`` rather than ``jax.vmap``: the transitions are
+    scatter/gather-heavy and batching them materializes every branch of
+    the per-op ``switch`` for every lane, which is several times slower
+    on CPU than mapping the already-tight single-device scan."""
+    return jax.lax.map(
+        lambda p: jax.lax.scan(
+            lambda s, r: _apply_op_impl(cfg, s, r), state, p), programs)
+
+
+# ----------------------------------------------------------------------- #
+# host-facing wrapper
+# ----------------------------------------------------------------------- #
+def encode_program(ops) -> np.ndarray:
+    """``[(opcode, zone, n_pages, flags), ...]`` -> (n_ops, 4) int32."""
+    out = np.zeros((len(ops), 4), dtype=np.int32)
+    for i, row in enumerate(ops):
+        out[i, : len(row)] = row
+    return out
+
+
+class ZoneEngine:
+    """Pure functional core of one emulated ZNS device.
+
+    Holds the static :class:`EngineConfig` + :class:`ElementLayout` and
+    wraps the module-level jitted transitions; state is always passed
+    explicitly (the engine itself is stateless and shareable).
+    """
+
+    def __init__(self, flash: FlashGeometry, zone_geom: ZoneGeometry,
+                 spec: ElementSpec, *, max_active: int = 14,
+                 wear_aware: Optional[bool] = None):
+        self.flash = flash
+        self.zone_geom = zone_geom
+        self.spec = spec
+        self.cfg, self.layout = make_config(
+            flash, zone_geom, spec, max_active=max_active,
+            wear_aware=wear_aware)
+
+    # -- state ---------------------------------------------------------- #
+    def init_state(self) -> DeviceState:
+        return init_state(self.cfg)
+
+    def apply(self, state: DeviceState, row) -> Tuple[DeviceState, OpTrace]:
+        return apply_op(self.cfg, state,
+                        jnp.asarray(row, jnp.int32))
+
+    def run(self, state: DeviceState, program: np.ndarray
+            ) -> Tuple[DeviceState, OpTrace]:
+        return run_program(self.cfg, state, jnp.asarray(program, jnp.int32))
+
+    def run_batch(self, state: DeviceState, programs: np.ndarray
+                  ) -> Tuple[DeviceState, OpTrace]:
+        return run_programs(self.cfg, state,
+                            jnp.asarray(programs, jnp.int32))
+
+    def warmup(self) -> None:
+        """Compile every op branch on a scratch state (one switch jit)."""
+        s = self.init_state()
+        for op in (OP_ALLOC, OP_WRITE, OP_FINISH, OP_RESET):
+            s, _ = self.apply(s, (op, 0, 1, F_HOST))
+        jax.block_until_ready(s.elem_wear)
+
+    # -- metrics -------------------------------------------------------- #
+    def metrics(self, state: DeviceState) -> dict:
+        host = int(state.host_pages)
+        dummy = int(state.dummy_pages)
+        return {
+            "host_pages": float(host),
+            "dummy_pages": float(dummy),
+            "dlwa": (host + dummy) / host if host else 1.0,
+            "block_erases": float(int(state.block_erases)),
+            "alloc_calls": float(int(state.alloc_calls)),
+            "n_active": float(int(state.n_active)),
+        }
+
+    def elem_wear(self, state: DeviceState) -> np.ndarray:
+        return np.asarray(state.elem_wear[: self.cfg.n_elements],
+                          dtype=np.int64)
+
+    def block_wear(self, state: DeviceState) -> np.ndarray:
+        wear = np.zeros(self.flash.n_blocks, dtype=np.int64)
+        wear[self.layout.blocks.reshape(-1)] = np.repeat(
+            self.elem_wear(state), self.layout.blocks_per_element)
+        return wear
+
+    # -- IO stream reconstruction (host-side, post-scan) ---------------- #
+    def op_stream(self, op: int, wp_before: int, wp_after: int,
+                  dummy_delta: int, elems_after: np.ndarray,
+                  cols: np.ndarray):
+        """Rebuild the per-page ``(luns, channels)`` stream of one traced
+        op, exactly as the legacy device's ``trace=True`` path emits it.
+        Returns ``None`` when the op moved no pages."""
+        cfg = self.cfg
+        cols = np.asarray(cols, dtype=np.int64)
+        if op == OP_WRITE and wp_after > wp_before:
+            return zns.page_stream(wp_before, wp_after - wp_before,
+                                   cfg.parallelism, cfg.pages_per_block,
+                                   cols, cfg.n_channels) + ("write",)
+        if op == OP_FINISH and dummy_delta > 0:
+            written = zns.element_pages(
+                wp_before, self.spec, cfg.parallelism, cfg.n_segments,
+                cfg.pages_per_block)
+            padded = np.nonzero((np.asarray(elems_after) >= 0)
+                                & (written > 0)
+                                & (written < cfg.pages_per_element))[0]
+            return zns.pad_stream(
+                wp_before, cfg.zone_pages, self.spec, cfg.parallelism,
+                cfg.pages_per_block, cols, padded.astype(np.int64),
+                cfg.n_channels) + ("write",)
+        return None

@@ -7,15 +7,25 @@
 * ``write_benchmark``       -- FIO-like sequential writes, varying request
                                size and concurrent zones (Fig. 9).
 * ``alloc_latency_benchmark``-- median zone-allocation latency (Table 4).
+
+Each benchmark also has a **batched engine driver** (``*_engine`` /
+``dlwa_sweep_engine``) that encodes the workload as an op program and
+executes it through :mod:`repro.core.engine` -- a whole occupancy sweep
+runs as one vmapped ``lax.scan`` instead of per-op Python calls, and the
+interference benchmark runs as a single fused finish+host-write program.
+The engine drivers are metric-identical to the per-op paths (tested) and
+are what ``tools/bench.py`` uses to track the engine-vs-legacy speedup.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+import time
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.core import engine as zengine
 from repro.core import timing
 from repro.core.device import IOTrace, ZNSDevice, ZoneState
 from repro.core.elements import ElementSpec
@@ -137,7 +147,13 @@ def alloc_latency_benchmark(dev: ZNSDevice, *, n_allocs: int = 32
     allocate -> write -> finish -> reset cycle so re-allocation hits the
     deferred-erase path too."""
     n = min(n_allocs, dev.n_zones)
-    # warm up jit
+    # Warm up jit *before* timing: every compilable path (engine op
+    # switch, or the legacy allocator's primary window + cheapest-groups
+    # fallback) -- otherwise first-call compilation lands in the sample
+    # set and skews small-sample medians (paper Table 4 methodology).
+    warmup = getattr(dev, "warmup_alloc", None)
+    if warmup is not None:
+        warmup()
     dev.zone_write(0, 1)
     dev.zone_finish(0)
     dev.zone_reset(0)
@@ -151,4 +167,237 @@ def alloc_latency_benchmark(dev: ZNSDevice, *, n_allocs: int = 32
         "n_allocs": float(len(dev.alloc_latencies_us)),
         "median_us": dev.median_alloc_latency_us(),
         "mean_us": float(np.mean(dev.alloc_latencies_us)),
+    }
+
+
+# --------------------------------------------------------------------- #
+# Batched engine drivers: workloads as op programs (one compiled scan)
+# --------------------------------------------------------------------- #
+def make_engine(flash: FlashGeometry, zone: ZoneGeometry,
+                spec: ElementSpec, *, max_active: int = 14,
+                wear_aware: Optional[bool] = None) -> zengine.ZoneEngine:
+    return zengine.ZoneEngine(flash, zone, spec, max_active=max_active,
+                              wear_aware=wear_aware)
+
+
+def dlwa_program(eng: zengine.ZoneEngine, *, occupancy: float,
+                 n_zones: Optional[int] = None) -> np.ndarray:
+    """Encode :func:`dlwa_benchmark` as an op program."""
+    cfg = eng.cfg
+    n_zones = n_zones or min(8, cfg.n_zones)
+    pages = max(1, int(round(cfg.zone_pages * occupancy)))
+    pages = min(pages, cfg.zone_pages)
+    rows = []
+    for z in range(n_zones):
+        rows.append((zengine.OP_WRITE, z, pages, zengine.F_HOST))
+        rows.append((zengine.OP_FINISH, z, 0, 0))
+    return zengine.encode_program(rows)
+
+
+def _dlwa_metrics(host: int, dummy: int, occupancy: float,
+                  n_zones: int) -> Dict[str, float]:
+    return {
+        "occupancy": occupancy,
+        "host_pages": float(host),
+        "dummy_pages": float(dummy),
+        "dummy_pages_per_zone": dummy / n_zones,
+        "dlwa": (host + dummy) / host if host else 1.0,
+    }
+
+
+def dlwa_benchmark_engine(eng: zengine.ZoneEngine, *, occupancy: float,
+                          n_zones: Optional[int] = None) -> Dict[str, float]:
+    """:func:`dlwa_benchmark` as one ``lax.scan`` (fresh device state)."""
+    n_zones = n_zones or min(8, eng.cfg.n_zones)
+    prog = dlwa_program(eng, occupancy=occupancy, n_zones=n_zones)
+    state, _ = eng.run(eng.init_state(), prog)
+    return _dlwa_metrics(int(state.host_pages), int(state.dummy_pages),
+                         occupancy, n_zones)
+
+
+def dlwa_sweep_engine(eng: zengine.ZoneEngine,
+                      occupancies: Sequence[float],
+                      *, n_zones: Optional[int] = None
+                      ) -> List[Dict[str, float]]:
+    """A whole occupancy sweep in ONE vmapped scan: every program has the
+    same shape (pages varies per row), so the sweep batches cleanly."""
+    n_zones = n_zones or min(8, eng.cfg.n_zones)
+    programs = np.stack([
+        dlwa_program(eng, occupancy=o, n_zones=n_zones)
+        for o in occupancies])
+    states, _ = eng.run_batch(eng.init_state(), programs)
+    hosts = np.asarray(states.host_pages)
+    dummies = np.asarray(states.dummy_pages)
+    return [_dlwa_metrics(int(hosts[k]), int(dummies[k]), occ, n_zones)
+            for k, occ in enumerate(occupancies)]
+
+
+def _op_traces(eng: zengine.ZoneEngine, program: np.ndarray, trace
+               ) -> List[Optional[IOTrace]]:
+    """Per-op IOTraces of an executed program (None for no-IO ops)."""
+    wp_b = np.asarray(trace.wp_before)
+    wp_a = np.asarray(trace.wp_after)
+    dummy = np.asarray(trace.dummy_delta)
+    elems = np.asarray(trace.elems)
+    cols = np.asarray(trace.cols)
+    out: List[Optional[IOTrace]] = []
+    for i in range(len(program)):
+        s = eng.op_stream(int(program[i, 0]), int(wp_b[i]), int(wp_a[i]),
+                          int(dummy[i]), elems[i], cols[i])
+        out.append(None if s is None else IOTrace(s[0], s[1], s[2]))
+    return out
+
+
+def interference_program(eng: zengine.ZoneEngine, *, concurrency: int,
+                         fill_occupancy: float = 0.4,
+                         host_pages_per_zone: Optional[int] = None
+                         ) -> np.ndarray:
+    """Fused finish+host-write program (victim fills, host writes, victim
+    FINISHes) -- the exact op order of :func:`interference_benchmark`."""
+    cfg = eng.cfg
+    fill = max(1, int(round(cfg.zone_pages * fill_occupancy)))
+    hpz = host_pages_per_zone or fill
+    rows = []
+    for z in range(concurrency):                       # victims fill
+        rows.append((zengine.OP_WRITE, z, fill, zengine.F_HOST))
+    for z in range(concurrency, 2 * concurrency):      # host writers
+        rows.append((zengine.OP_WRITE, z, hpz, zengine.F_HOST))
+    for z in range(concurrency):                       # victims FINISH
+        rows.append((zengine.OP_FINISH, z, 0, 0))
+    return zengine.encode_program(rows)
+
+
+def interference_benchmark_engine(eng: zengine.ZoneEngine, *,
+                                  concurrency: int,
+                                  fill_occupancy: float = 0.4,
+                                  host_pages_per_zone: Optional[int] = None
+                                  ) -> Dict[str, float]:
+    """:func:`interference_benchmark` via one scan + one stream rebuild;
+    timing uses the same :func:`repro.core.timing.run_trace` merge."""
+    prog = interference_program(
+        eng, concurrency=concurrency, fill_occupancy=fill_occupancy,
+        host_pages_per_zone=host_pages_per_zone)
+    state, trace = eng.run(eng.init_state(), prog)
+    streams = _op_traces(eng, prog, trace)
+    host_traces = [t for t in streams[concurrency: 2 * concurrency]
+                   if t is not None]
+    finish_traces = [t for t in streams[2 * concurrency:]
+                     if t is not None and len(t.luns)]
+    base = timing.run_trace(eng.flash, host_traces)
+    base_tp = sum(base[f"owner{i}_throughput_pages_s"]
+                  for i in range(len(host_traces)))
+    cont = timing.run_trace(eng.flash, host_traces + finish_traces)
+    cont_tp = sum(cont[f"owner{i}_throughput_pages_s"]
+                  for i in range(len(host_traces)))
+    factor = base_tp / cont_tp if cont_tp else float("inf")
+    return {
+        "concurrency": float(concurrency),
+        "baseline_pages_s": base_tp,
+        "contended_pages_s": cont_tp,
+        "interference": factor,
+        "dummy_pages": float(sum(len(t.luns) for t in finish_traces)),
+    }
+
+
+def write_benchmark_engine(eng: zengine.ZoneEngine, *, request_kib: int,
+                           n_jobs: int, mib_per_job: int = 16
+                           ) -> Dict[str, float]:
+    """:func:`write_benchmark` as an op program + one stream rebuild."""
+    cfg = eng.cfg
+    pages_per_req = max(1, request_kib * 1024 // eng.flash.page_bytes)
+    reqs_per_job = max(1, mib_per_job * 1024 * 1024
+                       // (pages_per_req * eng.flash.page_bytes))
+    total_pages = min(pages_per_req * reqs_per_job, cfg.zone_pages)
+    prog = zengine.encode_program(
+        [(zengine.OP_WRITE, j, total_pages, zengine.F_HOST)
+         for j in range(n_jobs)])
+    state, trace = eng.run(eng.init_state(), prog)
+    traces = [t for t in _op_traces(eng, prog, trace) if t is not None]
+    stats = timing.run_trace(eng.flash, traces)
+    return {
+        "request_kib": float(request_kib),
+        "n_jobs": float(n_jobs),
+        "pages": float(stats["n"]),
+        "bandwidth_mib_s": timing.write_bandwidth_mib_s(eng.flash, stats),
+        "makespan_s": stats["makespan_s"],
+    }
+
+
+# --------------------------------------------------------------------- #
+# Engine vs legacy per-op loop: the PR's tracked perf trajectory
+# --------------------------------------------------------------------- #
+def engine_vs_legacy_speedup(*, occupancies: Sequence[float] = tuple(
+        np.linspace(0.05, 0.95, 16)), n_zones: int = 8,
+        concurrencies: Sequence[int] = (1, 2, 4, 7),
+        repeats: int = 3) -> Dict[str, float]:
+    """Time the DLWA occupancy sweep and the interference benchmark on
+    the legacy per-op ``LegacyZNSDevice`` loop vs the scan-compiled
+    engine (steady state: compile excluded via warmup).  Returns ops/sec
+    for both plus the speedups ``tools/bench.py`` archives."""
+    from repro.core.device_legacy import LegacyZNSDevice
+    from repro.core.elements import SUPERBLOCK
+    from repro.core.geometry import zn540
+
+    flash, zone = zn540()
+    eng = make_engine(flash, zone, SUPERBLOCK, max_active=28)
+
+    # ---- dlwa sweep -------------------------------------------------- #
+    n_ops_dlwa = 2 * n_zones * len(occupancies)
+    dlwa_sweep_engine(eng, occupancies, n_zones=n_zones)  # compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        eng_rows = dlwa_sweep_engine(eng, occupancies, n_zones=n_zones)
+    t_eng_dlwa = (time.perf_counter() - t0) / repeats
+
+    def legacy_sweep():
+        rows = []
+        for occ in occupancies:
+            dev = LegacyZNSDevice(flash, zone, SUPERBLOCK, max_active=28)
+            rows.append(dlwa_benchmark(dev, occupancy=occ,
+                                       n_zones=n_zones))
+        return rows
+    legacy_sweep()  # warm the allocator jit
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        leg_rows = legacy_sweep()
+    t_leg_dlwa = (time.perf_counter() - t0) / repeats
+    assert [r["dlwa"] for r in eng_rows] == [r["dlwa"] for r in leg_rows]
+
+    # ---- interference (fused finish+host-write program) -------------- #
+    n_ops_intf = sum(3 * c for c in concurrencies)
+
+    def engine_intf():
+        return [interference_benchmark_engine(eng, concurrency=c)
+                for c in concurrencies]
+
+    def legacy_intf():
+        out = []
+        for c in concurrencies:
+            dev = LegacyZNSDevice(flash, zone, SUPERBLOCK, max_active=28)
+            out.append(interference_benchmark(dev, concurrency=c))
+        return out
+    engine_intf(); legacy_intf()  # compile both paths
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        ei = engine_intf()
+    t_eng_intf = (time.perf_counter() - t0) / repeats
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        li = legacy_intf()
+    t_leg_intf = (time.perf_counter() - t0) / repeats
+    assert [r["dummy_pages"] for r in ei] == [r["dummy_pages"] for r in li]
+
+    return {
+        "dlwa_ops": float(n_ops_dlwa),
+        "dlwa_legacy_s": t_leg_dlwa,
+        "dlwa_engine_s": t_eng_dlwa,
+        "dlwa_legacy_ops_s": n_ops_dlwa / t_leg_dlwa,
+        "dlwa_engine_ops_s": n_ops_dlwa / t_eng_dlwa,
+        "dlwa_speedup": t_leg_dlwa / t_eng_dlwa,
+        "interference_ops": float(n_ops_intf),
+        "interference_legacy_s": t_leg_intf,
+        "interference_engine_s": t_eng_intf,
+        "interference_legacy_ops_s": n_ops_intf / t_leg_intf,
+        "interference_engine_ops_s": n_ops_intf / t_eng_intf,
+        "interference_speedup": t_leg_intf / t_eng_intf,
     }

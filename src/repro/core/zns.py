@@ -19,6 +19,7 @@ Element-slot ordering convention (used by the device mapping table):
 
 from __future__ import annotations
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.elements import ElementKind, ElementSpec
@@ -60,6 +61,41 @@ def element_pages(wp: int, spec: ElementSpec, parallelism: int,
         return blk.reshape(n_segments // s, s, P).sum(axis=1).reshape(-1)
     if spec.kind is ElementKind.FIXED:
         return np.asarray([blk.sum()], dtype=np.int64)
+    raise ValueError(spec.kind)
+
+
+def pages_per_block_jnp(wp, parallelism: int, n_segments: int,
+                        pages_per_blk: int):
+    """:func:`pages_per_block` with a traced ``wp`` (used inside the
+    :mod:`repro.core.engine` scan).  Returns int32 (n_segments, P)."""
+    P = parallelism
+    seg_pages = P * pages_per_blk
+    seg = jnp.arange(n_segments, dtype=jnp.int32)
+    w_seg = jnp.clip(wp - seg * seg_pages, 0, seg_pages)
+    col = jnp.arange(P, dtype=jnp.int32)
+    cnt = (w_seg[:, None] - col[None, :] + P - 1) // P
+    return jnp.clip(cnt, 0, pages_per_blk)
+
+
+def element_pages_jnp(wp, spec: ElementSpec, parallelism: int,
+                      n_segments: int, pages_per_blk: int):
+    """:func:`element_pages` with a traced ``wp`` (spec/shape static)."""
+    blk = pages_per_block_jnp(wp, parallelism, n_segments, pages_per_blk)
+    P = parallelism
+    if spec.kind is ElementKind.BLOCK:
+        return blk.reshape(-1)
+    if spec.kind is ElementKind.VCHUNK:
+        s = spec.chunk
+        return blk.reshape(n_segments, P // s, s).sum(axis=2).reshape(-1)
+    if spec.kind is ElementKind.SUPERBLOCK:
+        return blk.sum(axis=1)
+    if spec.kind is ElementKind.HCHUNK:
+        s = spec.chunk
+        if n_segments % s:
+            raise ValueError("hchunk span must divide n_segments")
+        return blk.reshape(n_segments // s, s, P).sum(axis=1).reshape(-1)
+    if spec.kind is ElementKind.FIXED:
+        return blk.sum().reshape(1)
     raise ValueError(spec.kind)
 
 

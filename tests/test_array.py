@@ -299,3 +299,51 @@ def test_parity_traffic_lengthens_parity_member_makespan():
         flash, timing.group_tagged(par.zone_write(0, n, trace=True), 4))
     assert t_par["fleet_makespan_s"] >= t_plain["fleet_makespan_s"]
     assert t_par["n"] == t_plain["n"] + par.geom.chunk_pages
+
+
+# --------------------------------------------------------------------- #
+# rebuild after failure
+# --------------------------------------------------------------------- #
+def test_rebuild_restores_member_and_reads():
+    arr = build(4, parity=True)
+    fill = max(1, int(arr.zone_pages * 0.6))
+    for z in range(2):
+        arr.zone_write(z, fill)
+        arr.zone_finish(z)
+    member_wp = [arr.devices[2].zones[z].wp for z in range(2)]
+    arr.fail_device(2)
+    tagged = arr.rebuild_device(2)
+    assert arr.failed == set()
+    # replacement holds exactly the chunk rows the old member held
+    for z in range(2):
+        assert arr.devices[2].zones[z].wp == member_wp[z]
+        assert arr.devices[2].zones[z].state is ZoneState.FULL
+    # rebuild writes on the replacement == its re-appended pages
+    wrote = sum(len(t.luns) for i, t in tagged
+                if i == 2 and t.op == "write")
+    assert wrote >= sum(member_wp)  # chunks + replacement FINISH padding
+    # every survivor contributed degraded reads
+    readers = {i for i, t in tagged if t.op == "read"}
+    assert readers == {0, 1, 3}
+    # post-rebuild, reads of the failed member's pages are served
+    # normally again (no degraded fan-out)
+    out = arr.zone_read(0, np.arange(8))
+    assert all(t.op == "read" for _, t in out)
+
+
+def test_rebuild_requires_parity_and_quorum():
+    arr = build(2, parity=False)
+    arr.zone_write(0, 16)
+    with pytest.raises(RuntimeError, match="parity"):
+        arr.rebuild_device(0)
+
+
+def test_rebuild_traces_feed_fleet_timing():
+    arr = build(3, parity=True)
+    arr.zone_write(0, max(1, arr.zone_pages // 2))
+    arr.zone_finish(0)
+    arr.fail_device(1)
+    tagged = arr.rebuild_device(1)
+    fleet = timing.run_fleet_trace(arr.flash, timing.group_tagged(tagged, 3))
+    assert fleet["fleet_makespan_s"] > 0
+    assert fleet["n"] == sum(len(t.luns) for _, t in tagged)

@@ -1,0 +1,96 @@
+"""Perf-trajectory tracker: legacy per-op loop vs scan-compiled engine.
+
+Times the DLWA occupancy sweep and the interference benchmark through
+both execution paths (``LegacyZNSDevice`` Python loop vs the
+``repro.core.engine`` vmapped/fused op programs), asserts the metrics
+agree, and writes a ``BENCH_zoneengine.json`` artifact so the speedup is
+tracked from this PR onward::
+
+    PYTHONPATH=src python tools/bench.py [--out BENCH_zoneengine.json]
+                                         [--repeats 3] [--quick]
+
+The artifact schema::
+
+    {"dlwa": {"legacy_ops_s": ..., "engine_ops_s": ..., "speedup": ...},
+     "interference": {...},
+     "meta": {"device": "zn540/superblock", ...}}
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import platform
+import sys
+
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+for _p in (str(_ROOT), str(_ROOT / "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+import numpy as np  # noqa: E402
+
+from repro.core import workloads  # noqa: E402
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", type=pathlib.Path,
+                    default=_ROOT / "BENCH_zoneengine.json")
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller sweep (CI smoke)")
+    args = ap.parse_args()
+
+    occs = (np.linspace(0.1, 0.9, 5) if args.quick
+            else np.linspace(0.05, 0.95, 16))
+    concs = (1, 4) if args.quick else (1, 2, 4, 7)
+    rep = workloads.engine_vs_legacy_speedup(
+        occupancies=tuple(float(o) for o in occs),
+        n_zones=4 if args.quick else 8,
+        concurrencies=concs,
+        repeats=args.repeats)
+
+    artifact = {
+        "dlwa": {
+            "ops": rep["dlwa_ops"],
+            "legacy_s": rep["dlwa_legacy_s"],
+            "engine_s": rep["dlwa_engine_s"],
+            "legacy_ops_s": rep["dlwa_legacy_ops_s"],
+            "engine_ops_s": rep["dlwa_engine_ops_s"],
+            "speedup": rep["dlwa_speedup"],
+        },
+        "interference": {
+            "ops": rep["interference_ops"],
+            "legacy_s": rep["interference_legacy_s"],
+            "engine_s": rep["interference_engine_s"],
+            "legacy_ops_s": rep["interference_legacy_ops_s"],
+            "engine_ops_s": rep["interference_engine_ops_s"],
+            "speedup": rep["interference_speedup"],
+        },
+        "meta": {
+            "device": "zn540/superblock",
+            "occupancies": len(occs),
+            "concurrencies": list(concs),
+            "repeats": args.repeats,
+            "python": platform.python_version(),
+            "machine": platform.machine(),
+        },
+    }
+    args.out.write_text(json.dumps(artifact, indent=2) + "\n")
+    for name in ("dlwa", "interference"):
+        row = artifact[name]
+        print(f"{name}: legacy {row['legacy_ops_s']:.0f} ops/s, "
+              f"engine {row['engine_ops_s']:.0f} ops/s, "
+              f"speedup {row['speedup']:.1f}x")
+    print(f"wrote {args.out}")
+    # the acceptance bar for this PR: scan-compiled dlwa sweep >= 5x
+    if artifact["dlwa"]["speedup"] < 5.0:
+        print("WARNING: dlwa speedup below the 5x target", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
