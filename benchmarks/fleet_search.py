@@ -1,0 +1,106 @@
+"""Fleet allocator search: tenant-mix x geometry x allocator, one dispatch.
+
+Evaluates the full :func:`repro.fleet.search.grid_space` (32 configs on
+zn540 by default: 2 tenant mixes x 2 effective zone geometries x 2
+stripe-chunk sizes x parity on/off x wear-aware/first-fit allocator,
+each expanded to ``--devices`` member lanes) through ONE batched
+``run_programs`` dispatch + ONE batched op-granular timing dispatch,
+scores the weighted (DLWA, wear spread, p99 tenant latency) objective,
+and emits the Pareto front.
+
+Same ``name,us_per_call,derived`` CSV schema as ``benchmarks/run.py``
+(via :class:`benchmarks.common.Bench`): one row per config plus
+``fleet_search_total`` and ``pareto_front`` summary rows.  The front is
+also written as JSON (``--out``, default ``fleet_pareto.json``)::
+
+    PYTHONPATH=src python benchmarks/fleet_search.py [--quick]
+        [--devices 4] [--random N --seed S] [--out fleet_pareto.json]
+
+``--random N`` swaps the grid for N seeded random samples (deterministic
+per seed).  The batched-vs-legacy speedup lives in ``tools/bench.py``
+(artifact ``BENCH_fleet.json``), not here.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+for _p in (str(_ROOT), str(_ROOT / "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+from benchmarks.common import Bench
+from repro.core import zn540
+from repro.core.elements import SUPERBLOCK
+from repro.core.engine import ZoneEngine
+from repro.fleet import (evaluate_configs, grid_space, pareto_front,
+                         random_space, score_rows)
+
+DERIVED_KEYS = ("dlwa", "wear_cv", "p99_latency_s", "makespan_s",
+                "block_erases", "score", "pareto")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--devices", type=int, default=4)
+    ap.add_argument("--random", type=int, default=0,
+                    help="sample N random configs instead of the grid")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--weights", type=float, nargs=3,
+                    default=(1.0, 1.0, 1.0),
+                    metavar=("W_DLWA", "W_WEAR", "W_P99"))
+    ap.add_argument("--out", type=str, default="fleet_pareto.json",
+                    help="Pareto front JSON ('' to skip)")
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller axes (CI smoke): 8 configs, 3 devices")
+    args = ap.parse_args()
+
+    flash, zone = zn540()
+    eng = ZoneEngine(flash, zone, SUPERBLOCK, max_active=14)
+    if args.quick:
+        axes = dict(segments=(22, 11), chunks=(1536,), parities=(False,),
+                    wear=(True, False))
+        n_devices = 3
+    else:
+        axes = {}
+        n_devices = args.devices
+    configs = (random_space(args.seed, args.random, **axes)
+               if args.random else grid_space(**axes))
+
+    b = Bench()
+    t0 = time.perf_counter()
+    rows = evaluate_configs(eng, configs, n_devices=n_devices)
+    total_us = (time.perf_counter() - t0) * 1e6
+    rows = score_rows(rows, weights=tuple(args.weights))
+    front = pareto_front(rows)
+
+    per_config_us = total_us / len(rows)
+    for r in rows:
+        b.add(f"fleet_{r['config']}", per_config_us,
+              ";".join(f"{k}={r[k]:.4g}" for k in DERIVED_KEYS))
+    b.add("fleet_search_total", total_us,
+          f"n_configs={len(rows)};n_devices={n_devices};"
+          f"batched_dispatches=2")
+    b.add("pareto_front", 0.0,
+          ";".join(r["config"] for r in front))
+    b.emit()
+
+    if args.out:
+        pathlib.Path(args.out).write_text(json.dumps({
+            "weights": list(args.weights),
+            "n_configs": len(rows),
+            "n_devices": n_devices,
+            "front": front,
+            "best_by_score": rows[0],
+        }, indent=2) + "\n")
+        print(f"# wrote {args.out} ({len(front)} Pareto configs)",
+              file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -8,6 +8,8 @@ log-structured parity, and implements the same
 """
 
 from repro.array.raid import (ArrayGeometry, SuperZoneInfo, TaggedTrace,
-                              ZNSArray)
+                              ZNSArray, data_device_of, locate_page,
+                              parity_device_of)
 
-__all__ = ["ArrayGeometry", "SuperZoneInfo", "TaggedTrace", "ZNSArray"]
+__all__ = ["ArrayGeometry", "SuperZoneInfo", "TaggedTrace", "ZNSArray",
+           "data_device_of", "locate_page", "parity_device_of"]

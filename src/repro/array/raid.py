@@ -79,6 +79,34 @@ class SuperZoneInfo:
 TaggedTrace = Tuple[int, IOTrace]
 
 
+# --------------------------------------------------------------------- #
+# stripe math (module-level: shared with the program-space striper in
+# repro.fleet.tenants, so there is exactly one source of truth)
+# --------------------------------------------------------------------- #
+def parity_device_of(zone_id: int, stripe: int, n_devices: int) -> int:
+    """Member holding ``stripe``'s parity chunk (RAID-5 rotation)."""
+    return (zone_id + stripe) % n_devices
+
+
+def data_device_of(zone_id: int, stripe: int, slot: int, n_devices: int,
+                   parity: bool) -> int:
+    """Member holding data slot ``slot`` of ``stripe`` (skipping the
+    stripe's parity device when parity is on)."""
+    if not parity:
+        return slot
+    p = parity_device_of(zone_id, stripe, n_devices)
+    return slot if slot < p else slot + 1
+
+
+def locate_page(zone_id: int, page: int, chunk_pages: int, n_data: int,
+                n_devices: int, parity: bool) -> Tuple[int, int, int, int]:
+    """Logical page -> (stripe, data slot, page-in-chunk, device)."""
+    stripe, off = divmod(page, chunk_pages * n_data)
+    slot, r = divmod(off, chunk_pages)
+    return stripe, slot, r, data_device_of(zone_id, stripe, slot,
+                                           n_devices, parity)
+
+
 class ZNSArray:
     """N independent :class:`ZNSDevice` members behind one zone surface."""
 
@@ -155,22 +183,17 @@ class ZNSArray:
     # stripe math
     # ------------------------------------------------------------------ #
     def _parity_device(self, zone_id: int, stripe: int) -> int:
-        return (zone_id + stripe) % self.geom.n_devices
+        return parity_device_of(zone_id, stripe, self.geom.n_devices)
 
     def _data_device(self, zone_id: int, stripe: int, slot: int) -> int:
-        """Device holding data slot ``slot`` of ``stripe`` (skipping the
-        stripe's parity device)."""
-        if not self.geom.parity:
-            return slot
-        p = self._parity_device(zone_id, stripe)
-        return slot if slot < p else slot + 1
+        return data_device_of(zone_id, stripe, slot, self.geom.n_devices,
+                              self.geom.parity)
 
     def _locate(self, zone_id: int, page: int) -> Tuple[int, int, int, int]:
         """Logical page -> (stripe, data slot, page-in-chunk, device)."""
-        c, k = self.geom.chunk_pages, self.geom.n_data
-        stripe, off = divmod(page, c * k)
-        slot, r = divmod(off, c)
-        return stripe, slot, r, self._data_device(zone_id, stripe, slot)
+        return locate_page(zone_id, page, self.geom.chunk_pages,
+                           self.geom.n_data, self.geom.n_devices,
+                           self.geom.parity)
 
     # ------------------------------------------------------------------ #
     # ZNS commands (ZoneBackend surface)

@@ -8,8 +8,9 @@ from repro.core.elements import (ElementKind, ElementSpec, ElementLayout,
                                  elements_per_zone, groups_per_zone,
                                  is_applicable)
 from repro.core.device import ZNSDevice, ZoneState, ZoneInfo, IOTrace
-from repro.core.engine import (DeviceState, EngineConfig, OpTrace,
-                               ZoneEngine, encode_program)
+from repro.core.engine import (DeviceState, DynConfig, EngineConfig,
+                               OpTrace, ZoneEngine, encode_program,
+                               make_dyn, stack_dyn)
 from repro.core.backend import ZoneBackend, check_backend
 from repro.core.allocator import (select_lowest_wear, allocate, RoundRobin,
                                   eligible_mask)
@@ -22,8 +23,8 @@ __all__ = [
     "FIXED", "hchunk", "vchunk", "PAPER_ELEMENTS", "build_layout",
     "elements_per_zone", "groups_per_zone", "is_applicable",
     "ZNSDevice", "ZoneState", "ZoneInfo", "IOTrace",
-    "DeviceState", "EngineConfig", "OpTrace", "ZoneEngine",
-    "encode_program",
+    "DeviceState", "DynConfig", "EngineConfig", "OpTrace", "ZoneEngine",
+    "encode_program", "make_dyn", "stack_dyn",
     "ZoneBackend", "check_backend",
     "select_lowest_wear", "allocate", "RoundRobin", "eligible_mask",
     "alloc_exact", "engine", "metrics", "timing", "workloads", "zns",

@@ -17,6 +17,14 @@ Today there are two implementations: a single emulated
 :class:`repro.array.ZNSArray` (zone-chunk striping + log-structured
 parity), which is what turns every single-device workload into a
 multi-device scenario for free.
+
+Units: every page quantity (``zone_pages``, ``n_pages``, write
+pointers, ``host_pages``/``dummy_pages``) counts *flash pages* of
+``flash.page_bytes`` bytes -- for an array these are logical pages of
+the superzone address space.  ``zones`` maps dense zone indexes to
+objects exposing at least ``.state`` (EMPTY/OPEN/FULL) and ``.wp``
+(pages written).  DLWA is dimensionless: (host + device-generated
+pages) / host pages.
 """
 
 from __future__ import annotations
@@ -54,14 +62,35 @@ class ZoneBackend(Protocol):
     def dummy_pages(self) -> int: ...
 
     def zone_write(self, zone_id: int, n_pages: int, *, host: bool = True,
-                   trace: bool = False) -> Optional[Any]: ...
+                   trace: bool = False) -> Optional[Any]:
+        """Append ``n_pages`` pages at the zone's write pointer.
 
-    def zone_read(self, zone_id: int, pages: np.ndarray) -> Any: ...
+        Opens (and allocates) an EMPTY zone; raises ``RuntimeError`` on
+        a FULL zone, overflow, or the active-zone limit.  ``host=False``
+        marks device-internal (dummy) traffic.  With ``trace`` returns
+        the per-page IO stream(s) for the timing model (an ``IOTrace``,
+        or ``(device, IOTrace)`` pairs from an array)."""
+        ...
+
+    def zone_read(self, zone_id: int, pages: np.ndarray) -> Any:
+        """Read the given page offsets (0-based within the zone);
+        returns IO stream(s) as in :meth:`zone_write`.  Arrays serve
+        reads of failed members degraded, via parity reconstruction."""
+        ...
 
     def zone_finish(self, zone_id: int, *, trace: bool = False
-                    ) -> Optional[Any]: ...
+                    ) -> Optional[Any]:
+        """Transition the zone to FULL: pad partially-written storage
+        elements (counted in ``dummy_pages``) and release untouched
+        ones.  No-op on FULL; with ``trace`` returns the padding
+        stream(s)."""
+        ...
 
-    def zone_reset(self, zone_id: int) -> None: ...
+    def zone_reset(self, zone_id: int) -> None:
+        """Return the zone to EMPTY.  Physical erase is deferred to
+        re-allocation (paper §5); the zone's valid elements are only
+        invalidated here."""
+        ...
 
 
 def check_backend(obj: Any) -> None:

@@ -16,22 +16,36 @@ the differential property tests in ``tests/test_engine_diff.py`` replay
 random op sequences through both.
 
 Op encoding (all int32): ``[opcode, zone, n_pages, flags]`` with flags
-bit0 = host write (0 -> dummy/device-internal write).  Illegal ops (FULL
-write, overflow, allocation failure, active-zone limit) never raise: they
-apply exactly the partial effects the legacy device leaves behind after
-its ``RuntimeError`` (e.g. an overflowing write still opens the zone) and
-report ``ok=0`` in the trace.
+bit0 = host write (0 -> dummy/device-internal write).  Rows may carry
+extra trailing columns (the fleet layer appends a *tenant* tag in column
+4, see :mod:`repro.fleet.tenants`); the engine only reads the first four.
+Illegal ops (FULL write, overflow, allocation failure, active-zone limit)
+never raise: they apply exactly the partial effects the legacy device
+leaves behind after its ``RuntimeError`` (e.g. an overflowing write still
+opens the zone) and report ``ok=0`` in the trace.
 
 Static configuration is a frozen hashable :class:`EngineConfig`, so the
 jitted transitions are compile-cached *per device geometry/spec*, not per
-engine instance.
+engine instance.  A small subset of the config -- the knobs that affect
+*values* but not *array shapes* -- can additionally be overridden per
+call (and per batch lane) with a traced :class:`DynConfig`: effective
+zone capacity in pages, the active-zone limit, the addressable zone
+count, and the allocator's wear-awareness.  This is what lets a single
+``run_programs`` dispatch batch a *heterogeneous* fleet: every lane
+shares the padded static shapes of the largest geometry while its
+``DynConfig`` selects the member's effective geometry/allocator (see
+:mod:`repro.fleet`).
+
+Units: ``n_pages``/``zone_pages``/``wp`` count flash pages; ``wear`` and
+``block_erases`` count erase-block erasures; zones and elements are
+indexed densely from 0.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -61,7 +75,16 @@ _BIG = 2**30  # sentinel wear for unavailable slots (matches allocator.py)
 # ----------------------------------------------------------------------- #
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
-    """Hashable static description of one device geometry/element spec."""
+    """Hashable static description of one device geometry/element spec.
+
+    All fields are compile-time constants (they determine array shapes
+    and loop structure).  Page-unit fields: ``pages_per_block``,
+    ``zone_pages``, ``pages_per_element``; block-unit:
+    ``blocks_per_element``; the rest count elements / groups / zones /
+    LUN columns.  The *value-only* subset (``zone_pages``,
+    ``max_active``, ``n_zones``, ``wear_aware``) can be shadowed per
+    call by a :class:`DynConfig`.
+    """
 
     kind: ElementKind
     chunk: int
@@ -123,6 +146,58 @@ class OpTrace(NamedTuple):
     erase_delta: jax.Array  # () i32
     elems: jax.Array       # (n_slots,) i32  zone slot row *after* the op
     cols: jax.Array        # (parallelism,) i32 zone column -> LUN
+
+
+class DynConfig(NamedTuple):
+    """Traced (per-call / per-batch-lane) overrides of the value-only
+    :class:`EngineConfig` fields.
+
+    Every field is a rank-0 array (or, under ``run_programs``, a
+    ``(n_programs,)`` vector -- one value per lane):
+
+    * ``zone_pages``  -- () i32, effective zone capacity in *pages*.
+      Must be ``<= cfg.zone_pages``; a smaller value emulates a
+      shorter-zone geometry (fewer segments) on the padded static
+      shapes: writes seal at the effective capacity and FINISH frees the
+      never-touched tail elements, so metrics match a device built with
+      the smaller geometry outright (tested).  Exact for every element kind
+      whose per-element page capacity is segment-count-independent
+      (BLOCK / VCHUNK / HCHUNK / SUPERBLOCK); FIXED elements *are* the
+      whole static zone, so FIXED lanes must keep the full capacity.
+    * ``max_active``  -- () i32, open/active-zone limit.
+    * ``n_zones``     -- () i32, addressable zones (``<= cfg.n_zones``);
+      op rows are clipped into ``[0, n_zones)``.
+    * ``wear_aware``  -- () bool, allocator policy: lowest-(wear, col)
+      selection when true, first-fit by column when false.
+    """
+
+    zone_pages: jax.Array
+    max_active: jax.Array
+    n_zones: jax.Array
+    wear_aware: jax.Array
+
+
+def make_dyn(cfg: EngineConfig, *, zone_pages: Optional[int] = None,
+             max_active: Optional[int] = None, n_zones: Optional[int] = None,
+             wear_aware: Optional[bool] = None) -> DynConfig:
+    """A :class:`DynConfig` defaulting every field to ``cfg``'s value."""
+    i32 = jnp.int32
+    return DynConfig(
+        zone_pages=jnp.asarray(
+            cfg.zone_pages if zone_pages is None else zone_pages, i32),
+        max_active=jnp.asarray(
+            cfg.max_active if max_active is None else max_active, i32),
+        n_zones=jnp.asarray(
+            cfg.n_zones if n_zones is None else n_zones, i32),
+        wear_aware=jnp.asarray(
+            cfg.wear_aware if wear_aware is None else wear_aware, bool),
+    )
+
+
+def stack_dyn(dyns: Sequence[DynConfig]) -> DynConfig:
+    """Stack per-lane :class:`DynConfig`\\ s along a leading batch axis
+    (the shape ``run_programs`` consumes for a heterogeneous batch)."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *dyns)
 
 
 def _slot_stride(spec: ElementSpec, parallelism: int) -> int:
@@ -203,43 +278,57 @@ def _rr_mask(cfg: EngineConfig, start: jax.Array) -> jax.Array:
     return jnp.zeros(cfg.n_groups, bool).at[idx].set(True)
 
 
-def _take_lowest(cfg: EngineConfig, w2, a2, eligible, by_wear: bool):
+def _take_lowest(cfg: EngineConfig, w2, a2, eligible, by_wear, take_eff):
     """Per-eligible-group ``take`` lowest-(wear, col) available elements.
 
     One ``top_k`` over the unique composite key ``wear * per_group + col``
     reproduces the legacy stable argsort selection *and* its arrange
     order (within a group, selected elements ranked by wear then column)
-    without full sorts -- the scan's hot path.  ``by_wear=False`` is the
-    wear-oblivious first-fit (key = column alone).
+    without full sorts -- the scan's hot path.  ``by_wear`` may be a
+    traced () bool (the :class:`DynConfig` allocator axis); false is the
+    wear-oblivious first-fit (selection key = column alone).
+    ``take_eff`` (traced, ``<= cfg.take``) is how many of the selected
+    elements the zone will actually claim (fewer under an effective-
+    capacity override): feasibility only requires that many.
 
-    Returns (cols (n_groups, take) ordered ascending by key, feasible).
-    Valid only where ``eligible``; overflow-safe while wear stays below
-    ``2**30 / per_group`` (far beyond any simulated churn).
+    Returns (cols (n_groups, take) ordered ascending by (wear, col),
+    feasible).  Valid only where ``eligible``; overflow-safe while wear
+    stays below ``2**30 / per_group`` (far beyond any simulated churn).
     """
     free = (a2 == AVAIL_FREE) | (a2 == AVAIL_INVALID)
     free = free & eligible[:, None]
     col = jnp.arange(cfg.per_group, dtype=jnp.int32)[None, :]
-    key = (w2 * cfg.per_group + col) if by_wear else col
-    key = jnp.where(free, key, _BIG)
+    composite = w2 * cfg.per_group + col
+    key = jnp.where(free, jnp.where(by_wear, composite, col), _BIG)
     negv, cols = jax.lax.top_k(-key, cfg.take)
-    got_all = (-negv[:, -1]) < _BIG  # take-th smallest is a real element
+    # the take_eff-th smallest key must be a real element
+    kth = jnp.take(negv, take_eff - 1, axis=1)
+    got_all = (-kth) < _BIG
     feasible = jnp.all(got_all | ~eligible)
     cols = cols.astype(jnp.int32)
-    if not by_wear:
-        # selection is first-fit by column, but the legacy ``_arrange``
-        # still ranks the selected elements by (wear, col) when
-        # assigning them to zone slots -- reorder to match
-        sel_key = jnp.take_along_axis(w2, cols, axis=1) * cfg.per_group + cols
-        order = jnp.argsort(sel_key, axis=1, stable=True)
-        cols = jnp.take_along_axis(cols, order, axis=1)
+    # whatever key selected the elements, the legacy ``_arrange`` ranks
+    # them by (wear, col) when assigning zone slots.  On the wear-aware
+    # path the top_k output is already in that order, so the reorder is
+    # an identity there (and lets ``by_wear`` stay traced).  Non-free
+    # filler (top_k rows with fewer than ``take`` free elements) must
+    # keep sorting last, or an in-use element could be reordered into
+    # the claimed take_eff prefix and stolen from its zone.
+    sel_free = jnp.take_along_axis(free, cols, axis=1)
+    sel_key = jnp.where(
+        sel_free,
+        jnp.take_along_axis(w2, cols, axis=1) * cfg.per_group + cols,
+        _BIG)
+    order = jnp.argsort(sel_key, axis=1, stable=True)
+    cols = jnp.take_along_axis(cols, order, axis=1)
     return cols, feasible
 
 
-def _cheapest_groups(cfg: EngineConfig, w2, a2) -> jax.Array:
+def _cheapest_groups(cfg: EngineConfig, w2, a2, take_eff) -> jax.Array:
     ok = (a2 == AVAIL_FREE) | (a2 == AVAIL_INVALID)
     keyed = jnp.where(ok, w2.astype(jnp.float32), jnp.inf)
     part = -jax.lax.top_k(-keyed, cfg.take)[0]  # take smallest per row
-    cost = part.sum(axis=1)  # inf when < take available
+    rank = jnp.arange(cfg.take, dtype=jnp.int32)[None, :]
+    cost = jnp.where(rank < take_eff, part, 0.0).sum(axis=1)
     order = jnp.argsort(cost, stable=True)[: cfg.zone_groups]
     return jnp.zeros(cfg.n_groups, bool).at[order].set(True)
 
@@ -252,12 +341,12 @@ def _where_state(pred, new: DeviceState, old: DeviceState) -> DeviceState:
 # ----------------------------------------------------------------------- #
 # transitions
 # ----------------------------------------------------------------------- #
-def _alloc(cfg: EngineConfig, state: DeviceState, zone: jax.Array
-           ) -> Tuple[DeviceState, jax.Array]:
+def _alloc(cfg: EngineConfig, dyn: DynConfig, state: DeviceState,
+           zone: jax.Array) -> Tuple[DeviceState, jax.Array]:
     """ALLOC a zone's elements (legacy ``_allocate_zone``).  Caller guards
     on the zone being EMPTY; this applies the selection + deferred erase."""
     n = cfg.n_elements
-    limit_ok = state.n_active < cfg.max_active
+    limit_ok = state.n_active < dyn.max_active
 
     if cfg.kind is ElementKind.FIXED:
         wear = state.elem_wear[:n]
@@ -265,7 +354,8 @@ def _alloc(cfg: EngineConfig, state: DeviceState, zone: jax.Array
         free = (avail == AVAIL_FREE) | (avail == AVAIL_INVALID)
         key = jnp.where(
             free,
-            wear if cfg.wear_aware else jnp.arange(n, dtype=jnp.int32),
+            jnp.where(dyn.wear_aware, wear,
+                      jnp.arange(n, dtype=jnp.int32)),
             _BIG)
         e = jnp.argmin(key).astype(jnp.int32)
         feasible = free.any()
@@ -278,15 +368,25 @@ def _alloc(cfg: EngineConfig, state: DeviceState, zone: jax.Array
         pg = cfg.per_group
         w2 = state.elem_wear[:n].reshape(cfg.n_groups, pg)
         a2 = state.elem_avail[:n].reshape(cfg.n_groups, pg)
+        # effective-capacity override (DynConfig): a shrunk lane claims
+        # only the slots its capacity can reach, so its element set --
+        # and therefore wear / deferred-erase accounting -- is exactly
+        # the one a device built with the smaller geometry would pick
+        # (slot layouts are uniform across groups for whole-segment
+        # capacities, so the per-group claim count is a single scalar)
+        n_slots_eff = dyn.zone_pages // cfg.pages_per_element
+        take_eff = jnp.clip(n_slots_eff // max(1, cfg.slot_stride),
+                            1, cfg.take).astype(jnp.int32)
         elig1 = _rr_mask(cfg, state.rr_next)
-        cols1, f1 = _take_lowest(cfg, w2, a2, elig1, cfg.wear_aware)
+        cols1, f1 = _take_lowest(cfg, w2, a2, elig1, dyn.wear_aware,
+                                 take_eff)
 
         # round-robin window exhausted: cheapest feasible groups instead
         # (the legacy fallback always uses the wear-aware selection);
         # lazily computed -- the common path pays for one top_k only
         def fallback(_):
-            elig2 = _cheapest_groups(cfg, w2, a2)
-            cols2, f2 = _take_lowest(cfg, w2, a2, elig2, True)
+            elig2 = _cheapest_groups(cfg, w2, a2, take_eff)
+            cols2, f2 = _take_lowest(cfg, w2, a2, elig2, True, take_eff)
             return cols2, f2, elig2
 
         cols, f2, elig = jax.lax.cond(
@@ -300,8 +400,9 @@ def _alloc(cfg: EngineConfig, state: DeviceState, zone: jax.Array
         ranks = jnp.arange(cfg.take, dtype=jnp.int32)[None, :]
         cpos = jnp.arange(cfg.zone_groups, dtype=jnp.int32)[:, None]
         slots = (ranks * cfg.slot_stride + cpos).reshape(-1)
+        claimed = slots < n_slots_eff
         elems_row = jnp.zeros(cfg.n_slots, jnp.int32).at[slots].set(
-            eids.reshape(-1))
+            jnp.where(claimed, eids.reshape(-1), -1))
         lpg = cfg.luns_per_group
         cols_row = (win[:, None] * lpg
                     + jnp.arange(lpg, dtype=jnp.int32)[None, :]
@@ -309,10 +410,16 @@ def _alloc(cfg: EngineConfig, state: DeviceState, zone: jax.Array
         # legacy advances the window even when the allocation then fails
         rr_next = (state.rr_next + cfg.zone_groups) % cfg.n_groups
 
+    if cfg.kind is ElementKind.FIXED:
+        flat = elems_row.reshape(-1)
+        claimed_flat = jnp.ones_like(flat, dtype=bool)
+    else:
+        # unclaimed selections scatter into the scratch slot
+        flat = jnp.where(claimed, eids.reshape(-1), n)
+        claimed_flat = claimed
     ok = limit_ok & feasible
     # deferred physical erase of invalid elements (paper §5 RESET)
-    flat = elems_row.reshape(-1)
-    inv = state.elem_avail[flat] == AVAIL_INVALID
+    inv = claimed_flat & (state.elem_avail[flat] == AVAIL_INVALID)
     erase_delta = inv.sum().astype(jnp.int32) * cfg.blocks_per_element
     new = state._replace(
         elem_wear=state.elem_wear.at[flat].add(inv.astype(jnp.int32)),
@@ -341,24 +448,24 @@ def _written_per_slot(cfg: EngineConfig, wp: jax.Array) -> jax.Array:
                                  cfg.n_segments, cfg.pages_per_block)
 
 
-def _write(cfg: EngineConfig, state: DeviceState, zone, n_pages, host
-           ) -> Tuple[DeviceState, jax.Array]:
+def _write(cfg: EngineConfig, dyn: DynConfig, state: DeviceState,
+           zone, n_pages, host) -> Tuple[DeviceState, jax.Array]:
     zst0 = state.zone_state[zone]
     state, aok = jax.lax.cond(
         zst0 == ZONE_EMPTY,
-        lambda s: _alloc(cfg, s, zone),
+        lambda s: _alloc(cfg, dyn, s, zone),
         lambda s: (s, jnp.asarray(True)),
         state)
     wp0 = state.zone_wp[zone]
     wp1 = wp0 + n_pages
-    ok = (zst0 != ZONE_FULL) & aok & (wp1 <= cfg.zone_pages)
+    ok = (zst0 != ZONE_FULL) & aok & (wp1 <= dyn.zone_pages)
 
     written = _written_per_slot(cfg, wp1).astype(jnp.int32)
     elems = state.zone_elems[zone]
     valid = elems >= 0
     idx = jnp.where(valid, elems, cfg.n_elements)
     touched = valid & (written > 0)
-    seal = wp1 == cfg.zone_pages
+    seal = wp1 == dyn.zone_pages
     new = state._replace(
         elem_pages=state.elem_pages.at[idx].set(written),
         elem_avail=state.elem_avail.at[
@@ -436,10 +543,10 @@ def _reset(cfg: EngineConfig, state: DeviceState, zone
 # ----------------------------------------------------------------------- #
 # op dispatch + program executor
 # ----------------------------------------------------------------------- #
-def _apply_op_impl(cfg: EngineConfig, state: DeviceState, row: jax.Array
-                   ) -> Tuple[DeviceState, OpTrace]:
+def _apply_op_impl(cfg: EngineConfig, dyn: DynConfig, state: DeviceState,
+                   row: jax.Array) -> Tuple[DeviceState, OpTrace]:
     op = row[0]
-    zone = jnp.clip(row[1], 0, cfg.n_zones - 1)
+    zone = jnp.clip(row[1], 0, dyn.n_zones - 1)
     n_pages = row[2]
     host = (row[3] & F_HOST) == F_HOST
 
@@ -448,7 +555,7 @@ def _apply_op_impl(cfg: EngineConfig, state: DeviceState, row: jax.Array
 
     def alloc_branch(s):
         zst0 = s.zone_state[zone]
-        s2, ok = _alloc(cfg, s, zone)
+        s2, ok = _alloc(cfg, dyn, s, zone)
         # no-op (and fine) when the zone is already mapped
         return (_where_state(zst0 == ZONE_EMPTY, s2, s),
                 jnp.where(zst0 == ZONE_EMPTY, ok, True))
@@ -457,7 +564,7 @@ def _apply_op_impl(cfg: EngineConfig, state: DeviceState, row: jax.Array
         jnp.clip(op, 0, OP_READ),
         [nop,
          alloc_branch,
-         lambda s: _write(cfg, s, zone, n_pages, host),
+         lambda s: _write(cfg, dyn, s, zone, n_pages, host),
          lambda s: _finish(cfg, s, zone),
          lambda s: _reset(cfg, s, zone),
          nop],  # OP_READ: reads never change device state
@@ -476,41 +583,66 @@ def _apply_op_impl(cfg: EngineConfig, state: DeviceState, row: jax.Array
 
 
 @functools.partial(jax.jit, static_argnums=(0,))
-def apply_op(cfg: EngineConfig, state: DeviceState, row: jax.Array
+def apply_op(cfg: EngineConfig, state: DeviceState, row: jax.Array,
+             dyn: Optional[DynConfig] = None
              ) -> Tuple[DeviceState, OpTrace]:
-    """One zone command as a pure jitted transition."""
-    return _apply_op_impl(cfg, state, row)
+    """One zone command as a pure jitted transition.  ``dyn`` (optional)
+    shadows the value-only config fields -- see :class:`DynConfig`."""
+    if dyn is None:
+        dyn = make_dyn(cfg)
+    return _apply_op_impl(cfg, dyn, state, row)
 
 
 @functools.partial(jax.jit, static_argnums=(0,))
-def run_program(cfg: EngineConfig, state: DeviceState, program: jax.Array
+def run_program(cfg: EngineConfig, state: DeviceState, program: jax.Array,
+                dyn: Optional[DynConfig] = None
                 ) -> Tuple[DeviceState, OpTrace]:
-    """Execute an ``(n_ops, 4)`` int32 program in a single ``lax.scan``."""
+    """Execute an ``(n_ops, >=4)`` int32 program in a single ``lax.scan``.
+    Only the first four row columns are interpreted; extra columns (e.g.
+    the fleet layer's tenant tag) ride along untouched."""
+    if dyn is None:
+        dyn = make_dyn(cfg)
     return jax.lax.scan(
-        lambda s, r: _apply_op_impl(cfg, s, r), state, program)
+        lambda s, r: _apply_op_impl(cfg, dyn, s, r), state, program)
 
 
 @functools.partial(jax.jit, static_argnums=(0,))
-def run_programs(cfg: EngineConfig, state: DeviceState, programs: jax.Array
+def run_programs(cfg: EngineConfig, state: DeviceState, programs: jax.Array,
+                 dyn: Optional[DynConfig] = None
                  ) -> Tuple[DeviceState, OpTrace]:
     """Batch :func:`run_program` over a leading program axis (shared
     initial state) -- a whole parameter sweep in one compiled dispatch.
+
+    ``dyn`` (optional) must hold ``(n_programs,)``-shaped leaves (see
+    :func:`stack_dyn`): lane ``k`` runs ``programs[k]`` under
+    ``dyn[k]``, which is how a *heterogeneous* fleet (mixed effective
+    zone geometries / allocator policies, padded to the largest static
+    shape) executes in one dispatch.
 
     Uses ``lax.map`` rather than ``jax.vmap``: the transitions are
     scatter/gather-heavy and batching them materializes every branch of
     the per-op ``switch`` for every lane, which is several times slower
     on CPU than mapping the already-tight single-device scan."""
+    if dyn is None:
+        return jax.lax.map(
+            lambda p: jax.lax.scan(
+                lambda s, r: _apply_op_impl(cfg, make_dyn(cfg), s, r),
+                state, p), programs)
     return jax.lax.map(
-        lambda p: jax.lax.scan(
-            lambda s, r: _apply_op_impl(cfg, s, r), state, p), programs)
+        lambda pd: jax.lax.scan(
+            lambda s, r: _apply_op_impl(cfg, pd[1], s, r), state, pd[0]),
+        (programs, dyn))
 
 
 # ----------------------------------------------------------------------- #
 # host-facing wrapper
 # ----------------------------------------------------------------------- #
-def encode_program(ops) -> np.ndarray:
-    """``[(opcode, zone, n_pages, flags), ...]`` -> (n_ops, 4) int32."""
-    out = np.zeros((len(ops), 4), dtype=np.int32)
+def encode_program(ops, width: int = 4) -> np.ndarray:
+    """``[(opcode, zone, n_pages, flags[, ...]), ...]`` -> (n_ops, width)
+    int32.  ``width > 4`` leaves room for engine-opaque columns (the
+    fleet layer stores a tenant tag in column 4); short rows are
+    zero-padded."""
+    out = np.zeros((len(ops), width), dtype=np.int32)
     for i, row in enumerate(ops):
         out[i, : len(row)] = row
     return out
@@ -538,18 +670,30 @@ class ZoneEngine:
     def init_state(self) -> DeviceState:
         return init_state(self.cfg)
 
-    def apply(self, state: DeviceState, row) -> Tuple[DeviceState, OpTrace]:
+    def dyn(self, **overrides) -> DynConfig:
+        """Per-call :class:`DynConfig` (``zone_pages`` / ``max_active`` /
+        ``n_zones`` / ``wear_aware`` keywords; others from ``cfg``)."""
+        return make_dyn(self.cfg, **overrides)
+
+    def apply(self, state: DeviceState, row,
+              dyn: Optional[DynConfig] = None
+              ) -> Tuple[DeviceState, OpTrace]:
         return apply_op(self.cfg, state,
-                        jnp.asarray(row, jnp.int32))
+                        jnp.asarray(row, jnp.int32), dyn)
 
-    def run(self, state: DeviceState, program: np.ndarray
+    def run(self, state: DeviceState, program: np.ndarray,
+            dyn: Optional[DynConfig] = None
             ) -> Tuple[DeviceState, OpTrace]:
-        return run_program(self.cfg, state, jnp.asarray(program, jnp.int32))
+        return run_program(self.cfg, state,
+                           jnp.asarray(program, jnp.int32), dyn)
 
-    def run_batch(self, state: DeviceState, programs: np.ndarray
+    def run_batch(self, state: DeviceState, programs: np.ndarray,
+                  dyn: Optional[DynConfig] = None
                   ) -> Tuple[DeviceState, OpTrace]:
+        """Batched :meth:`run`; ``dyn`` with ``(n_programs,)`` leaves
+        (see :func:`stack_dyn`) makes the batch heterogeneous."""
         return run_programs(self.cfg, state,
-                            jnp.asarray(programs, jnp.int32))
+                            jnp.asarray(programs, jnp.int32), dyn)
 
     def warmup(self) -> None:
         """Compile every op branch on a scratch state (one switch jit)."""

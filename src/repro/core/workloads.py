@@ -181,14 +181,21 @@ def make_engine(flash: FlashGeometry, zone: ZoneGeometry,
 
 
 def dlwa_program(eng: zengine.ZoneEngine, *, occupancy: float,
-                 n_zones: Optional[int] = None) -> np.ndarray:
-    """Encode :func:`dlwa_benchmark` as an op program."""
+                 n_zones: Optional[int] = None, zone_base: int = 0,
+                 zone_pages: Optional[int] = None) -> np.ndarray:
+    """Encode :func:`dlwa_benchmark` as an op program.
+
+    ``zone_base`` offsets the zones touched (the fleet layer namespaces
+    tenants into disjoint zone ranges); ``zone_pages`` overrides the
+    capacity occupancy is computed against (a fleet superzone's logical
+    capacity, or a ``DynConfig`` effective geometry)."""
     cfg = eng.cfg
     n_zones = n_zones or min(8, cfg.n_zones)
-    pages = max(1, int(round(cfg.zone_pages * occupancy)))
-    pages = min(pages, cfg.zone_pages)
+    cap = zone_pages or cfg.zone_pages
+    pages = max(1, int(round(cap * occupancy)))
+    pages = min(pages, cap)
     rows = []
-    for z in range(n_zones):
+    for z in range(zone_base, zone_base + n_zones):
         rows.append((zengine.OP_WRITE, z, pages, zengine.F_HOST))
         rows.append((zengine.OP_FINISH, z, 0, 0))
     return zengine.encode_program(rows)
@@ -250,19 +257,23 @@ def _op_traces(eng: zengine.ZoneEngine, program: np.ndarray, trace
 
 def interference_program(eng: zengine.ZoneEngine, *, concurrency: int,
                          fill_occupancy: float = 0.4,
-                         host_pages_per_zone: Optional[int] = None
-                         ) -> np.ndarray:
+                         host_pages_per_zone: Optional[int] = None,
+                         zone_base: int = 0,
+                         zone_pages: Optional[int] = None) -> np.ndarray:
     """Fused finish+host-write program (victim fills, host writes, victim
-    FINISHes) -- the exact op order of :func:`interference_benchmark`."""
+    FINISHes) -- the exact op order of :func:`interference_benchmark`.
+    ``zone_base`` / ``zone_pages`` as in :func:`dlwa_program`."""
     cfg = eng.cfg
-    fill = max(1, int(round(cfg.zone_pages * fill_occupancy)))
+    cap = zone_pages or cfg.zone_pages
+    fill = max(1, int(round(cap * fill_occupancy)))
     hpz = host_pages_per_zone or fill
     rows = []
-    for z in range(concurrency):                       # victims fill
+    b = zone_base
+    for z in range(b, b + concurrency):                    # victims fill
         rows.append((zengine.OP_WRITE, z, fill, zengine.F_HOST))
-    for z in range(concurrency, 2 * concurrency):      # host writers
+    for z in range(b + concurrency, b + 2 * concurrency):  # host writers
         rows.append((zengine.OP_WRITE, z, hpz, zengine.F_HOST))
-    for z in range(concurrency):                       # victims FINISH
+    for z in range(b, b + concurrency):                    # victims FINISH
         rows.append((zengine.OP_FINISH, z, 0, 0))
     return zengine.encode_program(rows)
 
@@ -299,18 +310,29 @@ def interference_benchmark_engine(eng: zengine.ZoneEngine, *,
     }
 
 
+def write_program(eng: zengine.ZoneEngine, *, request_kib: int,
+                  n_jobs: int, mib_per_job: int = 16, zone_base: int = 0,
+                  zone_pages: Optional[int] = None) -> np.ndarray:
+    """Encode :func:`write_benchmark`'s sequential-writer jobs (one
+    dedicated zone each) as an op program.  ``zone_base`` /
+    ``zone_pages`` as in :func:`dlwa_program`."""
+    cfg = eng.cfg
+    cap = zone_pages or cfg.zone_pages
+    pages_per_req = max(1, request_kib * 1024 // eng.flash.page_bytes)
+    reqs_per_job = max(1, mib_per_job * 1024 * 1024
+                       // (pages_per_req * eng.flash.page_bytes))
+    total_pages = min(pages_per_req * reqs_per_job, cap)
+    return zengine.encode_program(
+        [(zengine.OP_WRITE, zone_base + j, total_pages, zengine.F_HOST)
+         for j in range(n_jobs)])
+
+
 def write_benchmark_engine(eng: zengine.ZoneEngine, *, request_kib: int,
                            n_jobs: int, mib_per_job: int = 16
                            ) -> Dict[str, float]:
     """:func:`write_benchmark` as an op program + one stream rebuild."""
-    cfg = eng.cfg
-    pages_per_req = max(1, request_kib * 1024 // eng.flash.page_bytes)
-    reqs_per_job = max(1, mib_per_job * 1024 * 1024
-                       // (pages_per_req * eng.flash.page_bytes))
-    total_pages = min(pages_per_req * reqs_per_job, cfg.zone_pages)
-    prog = zengine.encode_program(
-        [(zengine.OP_WRITE, j, total_pages, zengine.F_HOST)
-         for j in range(n_jobs)])
+    prog = write_program(eng, request_kib=request_kib, n_jobs=n_jobs,
+                         mib_per_job=mib_per_job)
     state, trace = eng.run(eng.init_state(), prog)
     traces = [t for t in _op_traces(eng, prog, trace) if t is not None]
     stats = timing.run_trace(eng.flash, traces)

@@ -1,0 +1,40 @@
+"""Multi-tenant fleet simulation + allocator search over the ZoneEngine.
+
+The fleet layer turns the repo from "replay the paper's sweeps" into
+"search the design space the paper argues for":
+
+* :mod:`repro.fleet.tenants` -- tenant-tagged width-5 op programs, the
+  round-robin tenant interleaver, and the program-space RAID striper
+  (same stripe math as :class:`repro.array.ZNSArray`);
+* :mod:`repro.fleet.runner`  -- T tenants x N devices x K configs
+  executed through ONE batched ``run_programs`` dispatch (heterogeneous
+  per-lane geometries/allocators via ``DynConfig``) plus op-granular
+  fleet timing;
+* :mod:`repro.fleet.search`  -- grid/random search over (tenant mix,
+  zone geometry, chunk size, parity, wear-awareness) scored on a
+  weighted (DLWA, wear spread, p99 tenant latency) objective, with the
+  Pareto front of non-dominated configs.
+
+Entry points: ``benchmarks/fleet_search.py`` (the sweep),
+``examples/fleet.py`` (a small demo), ``tools/bench.py`` (writes the
+batched-vs-legacy speedup artifact ``BENCH_fleet.json`` by default;
+``--skip-engine`` isolates the fleet comparison).
+"""
+
+from repro.fleet.runner import FleetResult, config_report, run_fleet
+from repro.fleet.search import (MIXES, N_TENANTS, OBJECTIVE_KEYS,
+                                FleetConfig, build_fleet_batch,
+                                evaluate_configs, grid_space,
+                                pareto_front, random_space,
+                                run_configs_legacy, score_rows)
+from repro.fleet.tenants import (TENANT_COL, interleave_tenants,
+                                 pad_programs, stripe_program, tag_tenant)
+
+__all__ = [
+    "FleetResult", "config_report", "run_fleet",
+    "MIXES", "N_TENANTS", "OBJECTIVE_KEYS", "FleetConfig",
+    "build_fleet_batch", "evaluate_configs", "grid_space",
+    "pareto_front", "random_space", "run_configs_legacy", "score_rows",
+    "TENANT_COL", "interleave_tenants", "pad_programs",
+    "stripe_program", "tag_tenant",
+]

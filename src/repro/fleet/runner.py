@@ -1,0 +1,181 @@
+"""Batched fleet execution: T tenants x N devices x K configs, one dispatch.
+
+A fleet *lane* is one (config, member-device) pair: a width-5 op program
+(see :mod:`repro.fleet.tenants`) plus a per-lane
+:class:`repro.core.engine.DynConfig` selecting the member's effective
+zone geometry / allocator on the shared padded static
+:class:`~repro.core.engine.EngineConfig`.  :func:`run_fleet` stacks all
+lanes and executes them through ONE ``run_programs`` dispatch (a
+``lax.map`` of scan-compiled programs), then scores latency with ONE
+:func:`repro.core.timing.simulate_fleet_ops` dispatch -- no per-config
+or per-device Python loops on the hot path.
+
+Metric units: page counters count flash pages, ``erase_delta`` counts
+erase-block erasures, times are seconds.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import engine as zengine
+from repro.core import timing
+from repro.core.engine import DeviceState, DynConfig, ZoneEngine
+from repro.fleet.tenants import TENANT_COL
+
+
+@dataclasses.dataclass
+class FleetResult:
+    """Per-lane outputs of one batched fleet dispatch (all numpy).
+
+    Lane axis ``L`` = flattened (config, device); op axis is the padded
+    program length.  ``tenants`` holds the width-5 tenant column;
+    parity appends carry ``parity_tenant``; NOP padding moves 0 pages
+    and is ignored by every rollup.
+    """
+
+    programs: np.ndarray     # (L, n_ops, 5) i32
+    states: DeviceState      # stacked pytree, leading axis L
+    ok: np.ndarray           # (L, n_ops) bool  per-op legality
+    host_delta: np.ndarray   # (L, n_ops) host pages moved by each op
+    dummy_delta: np.ndarray  # (L, n_ops) dummy (FINISH-pad) pages
+    erase_delta: np.ndarray  # (L, n_ops) block erasures
+    pages: np.ndarray        # (L, n_ops) pages the op physically wrote
+    completions: np.ndarray  # (L, n_ops) op completion time (s)
+    latencies: np.ndarray    # (L, n_ops) closed-loop op latency (s)
+    makespans: np.ndarray    # (L,) lane makespan (s)
+    n_tenants: int           # real tenants (parity tag excluded)
+    parity_tenant: int
+
+    @property
+    def tenants(self) -> np.ndarray:
+        return self.programs[:, :, TENANT_COL]
+
+    def lane_wear(self, eng: ZoneEngine) -> np.ndarray:
+        """(L, n_elements) element wear (erase counts) per lane."""
+        n = eng.cfg.n_elements
+        return np.asarray(self.states.elem_wear[:, :n], dtype=np.int64)
+
+    def tenant_pages(self, lanes: np.ndarray) -> Dict[int, int]:
+        """Host pages per tenant summed over ``lanes`` (parity under
+        ``parity_tenant``)."""
+        t = self.tenants[lanes].reshape(-1)
+        h = self.host_delta[lanes].reshape(-1)
+        return {int(k): int(h[t == k].sum())
+                for k in range(self.n_tenants)} | {
+                    self.parity_tenant:
+                    int(h[t == self.parity_tenant].sum())}
+
+    def tenant_p99_latency(self, lanes: np.ndarray) -> Dict[int, float]:
+        """p99 closed-loop op latency per real tenant over ``lanes``
+        (0.0 for a tenant with no executed ops there)."""
+        t = self.tenants[lanes].reshape(-1)
+        lat = self.latencies[lanes].reshape(-1)
+        act = self.pages[lanes].reshape(-1) > 0
+        out = {}
+        for k in range(self.n_tenants):
+            sel = act & (t == k)
+            out[k] = float(np.percentile(lat[sel], 99)) if sel.any() else 0.0
+        return out
+
+
+def run_fleet(eng: ZoneEngine, programs: np.ndarray, *,
+              dyn: Optional[DynConfig] = None, n_tenants: int = 1,
+              parity_tenant: Optional[int] = None) -> FleetResult:
+    """Execute ``(L, n_ops, 5)`` fleet lanes in one batched dispatch.
+
+    ``dyn`` (optional) must hold ``(L,)`` leaves (``engine.stack_dyn``)
+    -- the heterogeneous-geometry / allocator axis.  Timing is the
+    op-granular :func:`~repro.core.timing.simulate_fleet_ops` model:
+    each executed op occupies its zone's LUN columns for
+    ``ceil(pages / P) * (t_prog + t_xfer)`` seconds; deferred-erase
+    latency is not modeled (it is tracked as ``erase_delta`` instead).
+    """
+    programs = np.asarray(programs, dtype=np.int32)
+    if programs.ndim != 3 or programs.shape[-1] <= TENANT_COL:
+        raise ValueError(f"want (L, n_ops, 5) programs, got "
+                         f"{programs.shape}")
+    if parity_tenant is None:
+        parity_tenant = n_tenants
+    states, trace = eng.run_batch(eng.init_state(), programs, dyn)
+
+    wp_b = np.asarray(trace.wp_before)
+    wp_a = np.asarray(trace.wp_after)
+    dummy = np.asarray(trace.dummy_delta)
+    op = programs[:, :, 0]
+    # pages the op physically programmed: write advance, plus FINISH
+    # padding (RESET rewinds wp without moving pages -> clip)
+    pages = np.maximum(wp_a - wp_b, 0) + np.where(
+        op == zengine.OP_FINISH, dummy, 0)
+    t_page = np.float32(eng.flash.t_prog + eng.flash.t_xfer)
+    completions, latencies, makespans = timing.simulate_fleet_ops(
+        np.asarray(trace.cols), pages.astype(np.int32),
+        programs[:, :, TENANT_COL], t_page,
+        eng.flash.n_luns, parity_tenant + 1)
+    return FleetResult(
+        programs=programs,
+        states=states,
+        ok=np.asarray(trace.ok),
+        host_delta=np.asarray(trace.host_delta),
+        dummy_delta=dummy,
+        erase_delta=np.asarray(trace.erase_delta),
+        pages=pages,
+        completions=np.asarray(completions),
+        latencies=np.asarray(latencies),
+        makespans=np.asarray(makespans),
+        n_tenants=n_tenants,
+        parity_tenant=parity_tenant,
+    )
+
+
+def config_report(res: FleetResult, eng: ZoneEngine,
+                  lanes: np.ndarray) -> Dict[str, float]:
+    """Roll one config's member lanes up to the paper's fleet metrics.
+
+    * ``dlwa``: array-level -- every page the fleet programs (host data
+      + parity + FINISH padding) per host data page;
+    * ``wear_cv`` / ``max_wear``: spread of element wear pooled over
+      all members (the wear-leveling objective, paper Fig. 7c);
+    * ``p99_latency_s``: worst real tenant's p99 closed-loop latency;
+    * ``makespan_s``: slowest member (the fleet completes a stripe only
+      when every chunk is durable).
+    """
+    lanes = np.asarray(lanes)
+    t = res.tenants[lanes]
+    host = int(res.host_delta[lanes][t != res.parity_tenant].sum())
+    par = int(res.host_delta[lanes][t == res.parity_tenant].sum())
+    dummy = int(res.dummy_delta[lanes].sum())
+    erases = int(res.erase_delta[lanes].sum())
+    wear = res.lane_wear(eng)[lanes].reshape(-1)
+    mean_w = float(wear.mean()) if wear.size else 0.0
+    p99 = res.tenant_p99_latency(lanes)
+    return {
+        "host_pages": float(host),
+        "parity_pages": float(par),
+        "dummy_pages": float(dummy),
+        "dlwa": (host + par + dummy) / host if host else 1.0,
+        "block_erases": float(erases),
+        "max_wear": float(wear.max()) if wear.size else 0.0,
+        "wear_cv": float(wear.std() / mean_w) if mean_w > 0 else 0.0,
+        "p99_latency_s": max(p99.values()) if p99 else 0.0,
+        "makespan_s": float(res.makespans[lanes].max()),
+        "ops_ok": float(res.ok[lanes].sum()),
+    }
+
+
+def assert_all_ok(res: FleetResult, lanes: Optional[np.ndarray] = None
+                  ) -> None:
+    """Raise if any *real* op (non-NOP) was illegal -- a mis-built
+    fleet program (overflow, active-zone limit) should fail loudly in
+    tests and benchmarks, not skew metrics silently."""
+    sel = slice(None) if lanes is None else lanes
+    real = res.programs[sel, :, 0] != zengine.OP_NOP
+    bad = real & ~res.ok[sel]
+    if bad.any():
+        lane, idx = np.argwhere(bad)[0]
+        raise AssertionError(
+            f"illegal op at lane {lane} index {idx}: "
+            f"{res.programs[sel][lane, idx].tolist()}")

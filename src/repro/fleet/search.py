@@ -1,0 +1,384 @@
+"""Allocator/geometry design-space search over batched fleet simulations.
+
+The paper's core argument is that zone-allocation strategy (element
+granularity, zone geometry, write order, mapping) drives DLWA, wear and
+host interference; SilentZNS wins by searching a wider allocation design
+space.  This module makes that search executable: a
+:class:`FleetConfig` crosses
+
+* **tenant mix**      -- which workload programs share the fleet
+                         (:data:`MIXES`, built from the paper's
+                         benchmarks in :mod:`repro.core.workloads`);
+* **zone geometry**   -- effective segments per zone, realized as a
+                         ``DynConfig`` capacity override on the padded
+                         static config (heterogeneous lanes batch
+                         together);
+* **chunk size**      -- the RAID stripe unit (pages per member turn);
+* **parity**          -- log-structured RAID-5 parity on/off;
+* **allocator**       -- wear-aware vs first-fit element selection;
+
+and every config expands to ``n_devices`` lanes that execute in ONE
+``run_programs`` dispatch (:func:`evaluate_configs`).  Configs are
+scored on a weighted (DLWA, wear spread, p99 tenant latency) objective
+(:func:`score_rows`) and the non-dominated set is reported as the
+Pareto front (:func:`pareto_front`).
+
+Grid enumeration (:func:`grid_space`) and seeded random sampling
+(:func:`random_space`) are both deterministic: same seed, same configs,
+same scores (tested).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import engine as zengine
+from repro.core import workloads
+from repro.core.elements import ElementKind, ElementSpec
+from repro.core.engine import ZoneEngine, stack_dyn
+from repro.core.geometry import FlashGeometry, ZoneGeometry
+from repro.fleet import runner
+from repro.fleet.tenants import (interleave_tenants, pad_programs,
+                                 stripe_program, tag_tenant)
+
+#: real tenants per mix (parity appends carry the tag N_TENANTS)
+N_TENANTS = 2
+
+
+def _with_churn(program: np.ndarray, cycles: int = 2) -> np.ndarray:
+    """Repeat a tenant program ``cycles`` times with a RESET of every
+    touched zone in between -- re-allocation after RESET is what drives
+    deferred erases and therefore wear (paper §5), so without churn the
+    wear objective is degenerate."""
+    zones = sorted({int(z) for z in program[:, 1]})
+    resets = zengine.encode_program(
+        [(zengine.OP_RESET, z, 0, 0) for z in zones],
+        width=program.shape[1])
+    parts: List[np.ndarray] = []
+    for c in range(cycles):
+        if c:
+            parts.append(resets)
+        parts.append(program)
+    return np.concatenate(parts)
+
+
+def _mix_dlwa_pair(eng: ZoneEngine, cap: int) -> List[np.ndarray]:
+    """Two DLWA-benchmark tenants at different occupancies, disjoint
+    superzones (paper Fig. 4a traffic, multi-tenant edition), cycled
+    through RESET churn."""
+    return [
+        _with_churn(workloads.dlwa_program(
+            eng, occupancy=0.35, n_zones=2, zone_base=0, zone_pages=cap)),
+        _with_churn(workloads.dlwa_program(
+            eng, occupancy=0.7, n_zones=2, zone_base=2, zone_pages=cap)),
+    ]
+
+
+def _mix_dlwa_write(eng: ZoneEngine, cap: int) -> List[np.ndarray]:
+    """A DLWA (fill + FINISH) tenant next to a sequential-writer tenant
+    (paper Fig. 9 jobs) -- FINISH padding interferes with host writes.
+    The DLWA side churns; the writer keeps zones open."""
+    return [
+        _with_churn(workloads.dlwa_program(
+            eng, occupancy=0.5, n_zones=2, zone_base=0, zone_pages=cap)),
+        workloads.write_program(eng, request_kib=256, n_jobs=2,
+                                mib_per_job=96, zone_base=2,
+                                zone_pages=cap),
+    ]
+
+
+#: tenant-mix name -> builder(eng, logical_superzone_pages) -> programs
+MIXES: Dict[str, Callable[[ZoneEngine, int], List[np.ndarray]]] = {
+    "dlwa_pair": _mix_dlwa_pair,
+    "dlwa_write": _mix_dlwa_write,
+}
+
+#: objective keys, all lower-is-better
+OBJECTIVE_KEYS: Tuple[str, ...] = ("dlwa", "wear_cv", "p99_latency_s")
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetConfig:
+    """One point of the allocator/geometry design space."""
+
+    mix: str             # tenant mix (MIXES key)
+    n_segments: int      # effective segments per member zone
+    chunk_pages: int     # stripe unit (pages per member turn)
+    parity: bool         # log-structured RAID-5 parity
+    wear_aware: bool     # allocator policy
+
+    def describe(self) -> str:
+        return (f"{self.mix}_s{self.n_segments}_c{self.chunk_pages}"
+                f"_{'p1' if self.parity else 'p0'}"
+                f"_{'wa' if self.wear_aware else 'ff'}")
+
+
+def grid_space(*, mixes: Sequence[str] = tuple(MIXES),
+               segments: Sequence[int] = (22, 11),
+               chunks: Sequence[int] = (1536, 3072),
+               parities: Sequence[bool] = (False, True),
+               wear: Sequence[bool] = (True, False)) -> List[FleetConfig]:
+    """Full cross product (defaults: 2*2*2*2*2 = 32 configs on zn540)."""
+    return [FleetConfig(m, s, c, p, w)
+            for m, s, c, p, w in itertools.product(
+                mixes, segments, chunks, parities, wear)]
+
+
+def random_space(seed: int, n: int, *,
+                 mixes: Sequence[str] = tuple(MIXES),
+                 segments: Sequence[int] = (22, 11),
+                 chunks: Sequence[int] = (1536, 3072),
+                 parities: Sequence[bool] = (False, True),
+                 wear: Sequence[bool] = (True, False)
+                 ) -> List[FleetConfig]:
+    """``n`` distinct configs sampled without replacement from the grid
+    by a seeded PRNG -- deterministic under a fixed seed (tested)."""
+    grid = grid_space(mixes=mixes, segments=segments, chunks=chunks,
+                      parities=parities, wear=wear)
+    rng = np.random.default_rng(seed)
+    idx = rng.choice(len(grid), size=min(n, len(grid)), replace=False)
+    return [grid[i] for i in idx]
+
+
+def build_fleet_batch(eng: ZoneEngine, configs: Sequence[FleetConfig],
+                      *, n_devices: int
+                      ) -> Tuple[np.ndarray, object, List[np.ndarray]]:
+    """Expand configs to the rectangular lane batch of one dispatch.
+
+    Returns ``(programs (K*n_devices, n_ops, 5), dyn with (K*n_devices,)
+    leaves, merged logical programs per config)``.  The merged logical
+    program of config ``k`` (tenants interleaved, superzone-addressed,
+    pre-striping) is what the per-op legacy comparator replays through a
+    real ``ZNSArray`` -- both paths execute identical logical traffic.
+    """
+    if eng.cfg.kind is ElementKind.FIXED:
+        raise ValueError("FIXED elements span the whole static zone and "
+                         "cannot take an effective-capacity override")
+    seg_pages = eng.zone_geom.parallelism * eng.flash.pages_per_block
+    lane_programs: List[np.ndarray] = []
+    dyns = []
+    merged_per_config: List[np.ndarray] = []
+    for fc in configs:
+        if fc.n_segments > eng.zone_geom.n_segments:
+            raise ValueError(f"{fc}: n_segments exceeds the static "
+                             f"geometry ({eng.zone_geom.n_segments})")
+        member_zp = seg_pages * fc.n_segments
+        n_data = n_devices - (1 if fc.parity else 0)
+        cap = n_data * member_zp
+        tenant_progs = MIXES[fc.mix](eng, cap)
+        merged = interleave_tenants(
+            [tag_tenant(p, t) for t, p in enumerate(tenant_progs)])
+        merged_per_config.append(merged)
+        lane_programs += stripe_program(
+            merged, n_devices=n_devices, chunk_pages=fc.chunk_pages,
+            parity=fc.parity, member_zone_pages=member_zp,
+            parity_tenant=N_TENANTS)
+        dyns += [eng.dyn(zone_pages=member_zp,
+                         wear_aware=fc.wear_aware)] * n_devices
+    return pad_programs(lane_programs), stack_dyn(dyns), merged_per_config
+
+
+def evaluate_configs(eng: ZoneEngine, configs: Sequence[FleetConfig], *,
+                     n_devices: int = 4,
+                     check_legal: bool = True) -> List[Dict]:
+    """Score every config in ONE batched engine dispatch + ONE batched
+    timing dispatch; returns one metrics row per config (see
+    :func:`repro.fleet.runner.config_report`)."""
+    programs, dyn, _ = build_fleet_batch(eng, configs,
+                                         n_devices=n_devices)
+    res = runner.run_fleet(eng, programs, dyn=dyn, n_tenants=N_TENANTS)
+    if check_legal:
+        runner.assert_all_ok(res)
+    rows = []
+    for k, fc in enumerate(configs):
+        lanes = np.arange(k * n_devices, (k + 1) * n_devices)
+        row: Dict = {
+            "config": fc.describe(),
+            "mix": fc.mix,
+            "n_segments": fc.n_segments,
+            "chunk_pages": fc.chunk_pages,
+            "parity": float(fc.parity),
+            "wear_aware": float(fc.wear_aware),
+            "n_devices": float(n_devices),
+        }
+        row.update(runner.config_report(res, eng, lanes))
+        rows.append(row)
+    return rows
+
+
+def score_rows(rows: List[Dict],
+               weights: Tuple[float, float, float] = (1.0, 1.0, 1.0)
+               ) -> List[Dict]:
+    """Weighted sum of min-max-normalized objectives (lower = better);
+    (re)sets ``score`` in place and returns the rows sorted best-first
+    (re-scoring with different weights replaces, never accumulates)."""
+    for r in rows:
+        r["score"] = 0.0
+    for key, w in zip(OBJECTIVE_KEYS, weights):
+        vals = np.asarray([r[key] for r in rows], dtype=np.float64)
+        span = vals.max() - vals.min()
+        norm = (vals - vals.min()) / span if span > 0 else vals * 0.0
+        for r, v in zip(rows, norm):
+            r["score"] += float(w * v)
+    return sorted(rows, key=lambda r: r["score"])
+
+
+def pareto_front(rows: List[Dict],
+                 keys: Sequence[str] = OBJECTIVE_KEYS) -> List[Dict]:
+    """Non-dominated rows (no other row is <= on every key and < on
+    one); flags every row with ``pareto`` in place and returns the
+    front."""
+    vals = np.asarray([[r[k] for k in keys] for r in rows],
+                      dtype=np.float64)
+    front = []
+    for i, r in enumerate(rows):
+        dominated = np.any(
+            np.all(vals <= vals[i], axis=1)
+            & np.any(vals < vals[i], axis=1))
+        r["pareto"] = float(not dominated)
+        if not dominated:
+            front.append(r)
+    return front
+
+
+# --------------------------------------------------------------------- #
+# per-op legacy comparator (the speedup baseline tools/bench.py tracks)
+# --------------------------------------------------------------------- #
+def run_configs_legacy(flash: FlashGeometry, spec: ElementSpec,
+                       configs: Sequence[FleetConfig],
+                       merged_programs: Sequence[np.ndarray], *,
+                       parallelism: int, n_devices: int = 4,
+                       max_active: int = 14,
+                       fleet_timing: bool = False) -> List[Dict]:
+    """Evaluate each config the pre-fleet way: replay its merged logical
+    program through a real :class:`repro.array.ZNSArray` over per-op
+    ``LegacyZNSDevice`` members.  Each config gets devices built with
+    its *actual* (non-padded) zone geometry, so this doubles as a
+    semantic cross-check: array DLWA must match the batched engine path
+    exactly (tested, and asserted by ``tools/bench.py``).
+
+    With ``fleet_timing`` the replay also collects the page-granular IO
+    traces and runs :func:`repro.core.timing.run_fleet_trace` per
+    config -- the full evaluation pipeline ``benchmarks/raid_zns.py``
+    established in PR 1, and the baseline the ``BENCH_fleet.json``
+    speedup is measured against."""
+    from repro.array import ArrayGeometry, ZNSArray
+    from repro.core import timing
+    from repro.core.device_legacy import LegacyZNSDevice
+
+    out = []
+    for fc, merged in zip(configs, merged_programs):
+        geom = ZoneGeometry(parallelism=parallelism,
+                            n_segments=fc.n_segments)
+        devices = [LegacyZNSDevice(flash, geom, spec,
+                                   max_active=max_active,
+                                   wear_aware=fc.wear_aware)
+                   for _ in range(n_devices)]
+        arr = ZNSArray(devices, ArrayGeometry(
+            n_devices, fc.chunk_pages, fc.parity))
+        tagged: List = []
+        for row in merged:
+            op, zone, n_pages = int(row[0]), int(row[1]), int(row[2])
+            if op == zengine.OP_WRITE:
+                tr = arr.zone_write(zone, n_pages,
+                                    host=bool(row[3] & zengine.F_HOST),
+                                    trace=fleet_timing)
+                tagged += tr or []
+            elif op == zengine.OP_FINISH:
+                tagged += arr.zone_finish(zone, trace=fleet_timing) or []
+            elif op == zengine.OP_RESET:
+                arr.zone_reset(zone)
+        rep = arr.report()
+        rep["config"] = fc.describe()
+        # pooled over all members' blocks, the same statistic as
+        # runner.config_report (block wear repeats element wear
+        # blocks_per_element times, which leaves the CV unchanged)
+        w = np.concatenate([d.block_wear() for d in arr.devices])
+        rep["wear_cv"] = float(w.std() / w.mean()) if w.mean() > 0 else 0.0
+        if fleet_timing:
+            fleet = timing.run_fleet_trace(
+                arr.flash, timing.group_tagged(tagged, n_devices))
+            rep["makespan_s"] = fleet["fleet_makespan_s"]
+            rep["fleet_pages"] = float(fleet["n"])
+        out.append(rep)
+    return out
+
+
+def fleet_vs_legacy_speedup(*, n_devices: int = 4,
+                            configs: Optional[Sequence[FleetConfig]] = None,
+                            repeats: int = 3) -> Dict[str, float]:
+    """Time the batched fleet sweep against the per-op legacy pipeline.
+
+    Both paths evaluate the *same* configs on the *same* logical
+    traffic (the merged tenant programs), end to end:
+
+    * **engine** -- :func:`evaluate_configs`: ONE ``run_programs``
+      dispatch over all (config x device) lanes + ONE batched
+      op-granular timing dispatch;
+    * **legacy** -- :func:`run_configs_legacy` with ``fleet_timing``:
+      per config, a real ``ZNSArray`` over stateful-Python members,
+      page-granular trace collection, and a ``run_fleet_trace`` device
+      simulation -- exactly the evaluation pipeline
+      ``benchmarks/raid_zns.py`` established in PR 1.
+
+    Steady state (compile excluded via one warm pass); array-level DLWA
+    is asserted identical between the paths before anything is timed.
+    Also reports the replay-only legacy time (``legacy_replay_s``, no
+    trace/timing) so the artifact separates state-machine cost from the
+    page-granular timing cost the legacy path is stuck with.  Returns
+    the numbers ``tools/bench.py`` archives in ``BENCH_fleet.json``.
+    """
+    import time
+
+    from repro.core.elements import SUPERBLOCK
+    from repro.core.geometry import zn540
+
+    flash, zone_geom = zn540()
+    eng = ZoneEngine(flash, zone_geom, SUPERBLOCK, max_active=14)
+    if configs is None:
+        configs = grid_space()
+    programs, dyn, merged = build_fleet_batch(eng, configs,
+                                              n_devices=n_devices)
+    n_ops = int((programs[:, :, 0] != zengine.OP_NOP).sum())
+
+    def engine_pass():
+        return evaluate_configs(eng, configs, n_devices=n_devices)
+
+    def legacy_pass(fleet_timing=True):
+        return run_configs_legacy(
+            flash, SUPERBLOCK, configs, merged,
+            parallelism=zone_geom.parallelism, n_devices=n_devices,
+            fleet_timing=fleet_timing)
+
+    rows = engine_pass()      # compile/warm both paths
+    legacy = legacy_pass()
+    for r, l in zip(rows, legacy):
+        assert abs(r["dlwa"] - l["dlwa"]) < 1e-9, (
+            f"engine/legacy DLWA mismatch on {r['config']}: "
+            f"{r['dlwa']} vs {l['dlwa']}")
+
+    def timed(fn):
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            fn()
+        return (time.perf_counter() - t0) / repeats
+
+    t_eng = timed(engine_pass)
+    t_leg = timed(legacy_pass)
+    t_leg_replay = timed(lambda: legacy_pass(fleet_timing=False))
+    return {
+        "n_configs": float(len(configs)),
+        "n_devices": float(n_devices),
+        "fleet_ops": float(n_ops),
+        "legacy_s": t_leg,
+        "legacy_replay_s": t_leg_replay,
+        "engine_s": t_eng,
+        "legacy_configs_s": len(configs) / t_leg,
+        "engine_configs_s": len(configs) / t_eng,
+        "speedup": t_leg / t_eng,
+        "replay_speedup": t_leg_replay / t_eng,
+    }

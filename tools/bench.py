@@ -1,19 +1,24 @@
-"""Perf-trajectory tracker: legacy per-op loop vs scan-compiled engine.
+"""Perf-trajectory tracker: per-op legacy pipelines vs batched engine.
 
-Times the DLWA occupancy sweep and the interference benchmark through
-both execution paths (``LegacyZNSDevice`` Python loop vs the
-``repro.core.engine`` vmapped/fused op programs), asserts the metrics
-agree, and writes a ``BENCH_zoneengine.json`` artifact so the speedup is
-tracked from this PR onward::
+Two tracked trajectories, each written as a JSON artifact:
 
-    PYTHONPATH=src python tools/bench.py [--out BENCH_zoneengine.json]
-                                         [--repeats 3] [--quick]
+* ``BENCH_zoneengine.json`` -- the DLWA occupancy sweep and the
+  interference benchmark through the ``LegacyZNSDevice`` per-op loop vs
+  the scan-compiled ``repro.core.engine`` op programs (PR 2's gate:
+  dlwa sweep >= 5x).
+* ``BENCH_fleet.json`` -- the 32-config fleet allocator sweep
+  (``repro.fleet``) through one batched ``run_programs`` + one batched
+  op-granular timing dispatch vs the per-config legacy pipeline
+  (``ZNSArray`` over stateful-Python members + page-granular
+  ``run_fleet_trace``, the ``benchmarks/raid_zns.py`` way) -- this PR's
+  gate: fleet sweep >= 5x.
 
-The artifact schema::
+Both comparisons assert metric agreement between the paths before
+timing anything.  Usage::
 
-    {"dlwa": {"legacy_ops_s": ..., "engine_ops_s": ..., "speedup": ...},
-     "interference": {...},
-     "meta": {"device": "zn540/superblock", ...}}
+    PYTHONPATH=src python tools/bench.py [--quick] [--repeats 3]
+        [--out BENCH_zoneengine.json] [--fleet-out BENCH_fleet.json]
+        [--skip-engine | --skip-fleet]
 """
 
 from __future__ import annotations
@@ -32,17 +37,20 @@ for _p in (str(_ROOT), str(_ROOT / "src")):
 import numpy as np  # noqa: E402
 
 from repro.core import workloads  # noqa: E402
+from repro.fleet import grid_space  # noqa: E402
+from repro.fleet.search import fleet_vs_legacy_speedup  # noqa: E402
 
 
-def main() -> int:
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--out", type=pathlib.Path,
-                    default=_ROOT / "BENCH_zoneengine.json")
-    ap.add_argument("--repeats", type=int, default=3)
-    ap.add_argument("--quick", action="store_true",
-                    help="smaller sweep (CI smoke)")
-    args = ap.parse_args()
+def _meta(**extra) -> dict:
+    return {
+        "device": "zn540/superblock",
+        "python": platform.python_version(),
+        "machine": platform.machine(),
+        **extra,
+    }
 
+
+def bench_engine(args) -> int:
     occs = (np.linspace(0.1, 0.9, 5) if args.quick
             else np.linspace(0.05, 0.95, 16))
     concs = (1, 4) if args.quick else (1, 2, 4, 7)
@@ -69,14 +77,8 @@ def main() -> int:
             "engine_ops_s": rep["interference_engine_ops_s"],
             "speedup": rep["interference_speedup"],
         },
-        "meta": {
-            "device": "zn540/superblock",
-            "occupancies": len(occs),
-            "concurrencies": list(concs),
-            "repeats": args.repeats,
-            "python": platform.python_version(),
-            "machine": platform.machine(),
-        },
+        "meta": _meta(occupancies=len(occs), concurrencies=list(concs),
+                      repeats=args.repeats),
     }
     args.out.write_text(json.dumps(artifact, indent=2) + "\n")
     for name in ("dlwa", "interference"):
@@ -85,11 +87,56 @@ def main() -> int:
               f"engine {row['engine_ops_s']:.0f} ops/s, "
               f"speedup {row['speedup']:.1f}x")
     print(f"wrote {args.out}")
-    # the acceptance bar for this PR: scan-compiled dlwa sweep >= 5x
+    # the acceptance bar from PR 2: scan-compiled dlwa sweep >= 5x
     if artifact["dlwa"]["speedup"] < 5.0:
         print("WARNING: dlwa speedup below the 5x target", file=sys.stderr)
         return 1
     return 0
+
+
+def bench_fleet(args) -> int:
+    configs = None
+    if args.quick:
+        configs = grid_space(segments=(22, 11), chunks=(1536,),
+                             parities=(False, True), wear=(True,))
+    rep = fleet_vs_legacy_speedup(configs=configs, repeats=args.repeats)
+    artifact = {
+        "fleet_sweep": rep,
+        "meta": _meta(repeats=args.repeats, quick=bool(args.quick)),
+    }
+    args.fleet_out.write_text(json.dumps(artifact, indent=2) + "\n")
+    print(f"fleet: {rep['n_configs']:.0f} configs x "
+          f"{rep['n_devices']:.0f} devices, "
+          f"legacy {rep['legacy_s']:.2f}s vs engine {rep['engine_s']:.2f}s "
+          f"-> speedup {rep['speedup']:.1f}x "
+          f"(replay-only {rep['replay_speedup']:.1f}x)")
+    print(f"wrote {args.fleet_out}")
+    # this PR's acceptance bar: batched fleet sweep >= 5x
+    if rep["speedup"] < 5.0:
+        print("WARNING: fleet speedup below the 5x target", file=sys.stderr)
+        return 1
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", type=pathlib.Path,
+                    default=_ROOT / "BENCH_zoneengine.json")
+    ap.add_argument("--fleet-out", type=pathlib.Path,
+                    default=_ROOT / "BENCH_fleet.json")
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller sweeps (CI smoke)")
+    ap.add_argument("--skip-engine", action="store_true")
+    ap.add_argument("--skip-fleet", action="store_true")
+    args = ap.parse_args()
+
+    rc = 0
+    if not args.skip_engine:
+        rc |= bench_engine(args)
+    if not args.skip_fleet:
+        rc |= bench_fleet(args)
+    return rc
 
 
 if __name__ == "__main__":

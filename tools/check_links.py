@@ -1,0 +1,66 @@
+"""Markdown link checker for the docs CI job (stdlib only).
+
+Scans the given markdown files (default: README.md, ROADMAP.md,
+PAPER.md, docs/*.md) for inline links/images and verifies that every
+*relative* target exists in the repo.  External links (http/https/
+mailto) and pure in-page anchors are skipped; a ``path#anchor`` target
+is checked for the path only.  Exit code 1 with one line per broken
+link::
+
+    python tools/check_links.py [FILE.md ...]
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+# inline [text](target) and ![alt](target); stops at the first ')'
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_SKIP = ("http://", "https://", "mailto:", "#")
+
+
+def default_files() -> list:
+    out = [p for p in (_ROOT / "README.md", _ROOT / "ROADMAP.md",
+                       _ROOT / "PAPER.md") if p.exists()]
+    docs = _ROOT / "docs"
+    if docs.is_dir():
+        out += sorted(docs.glob("*.md"))
+    return out
+
+
+def check(path: pathlib.Path) -> list:
+    broken = []
+    text = path.read_text()
+    # drop fenced code blocks -- shell snippets aren't links
+    text = re.sub(r"```.*?```", "", text, flags=re.S)
+    for m in _LINK.finditer(text):
+        target = m.group(1)
+        if target.startswith(_SKIP):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        if not (path.parent / rel).exists():
+            broken.append(f"{path.relative_to(_ROOT)}: broken link "
+                          f"-> {target}")
+    return broken
+
+
+def main() -> int:
+    files = ([pathlib.Path(a) for a in sys.argv[1:]]
+             or default_files())
+    broken = []
+    for f in files:
+        broken += check(f)
+    for line in broken:
+        print(line, file=sys.stderr)
+    print(f"checked {len(files)} files: "
+          f"{'OK' if not broken else f'{len(broken)} broken link(s)'}")
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
