@@ -1,24 +1,35 @@
 """Fleet allocator search: tenant-mix x geometry x allocator, one dispatch.
 
-Evaluates the full :func:`repro.fleet.search.grid_space` (32 configs on
-zn540 by default: 2 tenant mixes x 2 effective zone geometries x 2
-stripe-chunk sizes x parity on/off x wear-aware/first-fit allocator,
-each expanded to ``--devices`` member lanes) through ONE batched
-``run_programs`` dispatch + ONE batched op-granular timing dispatch,
-scores the weighted (DLWA, wear spread, p99 tenant latency) objective,
-and emits the Pareto front.
+Three strategies over the same :class:`repro.fleet.SearchSpace` (2
+tenant mixes x 2 effective zone geometries x 2 stripe-chunk sizes x
+parity on/off x wear-aware/first-fit, each config expanded to
+``--devices`` member lanes), all scored through the shared batched
+:class:`repro.fleet.Evaluator`:
 
-Same ``name,us_per_call,derived`` CSV schema as ``benchmarks/run.py``
-(via :class:`benchmarks.common.Bench`): one row per config plus
-``fleet_search_total`` and ``pareto_front`` summary rows.  The front is
-also written as JSON (``--out``, default ``fleet_pareto.json``)::
+* ``--strategy grid``   -- the full cross product (32 configs on
+  zn540) in ONE batched ``run_programs`` + ONE timing dispatch;
+* ``--strategy random`` -- ``--random N`` seeded samples, one dispatch;
+* ``--strategy evolve`` -- the adaptive searcher
+  (:mod:`repro.fleet.evolve`): evolutionary proposals with a
+  successive-halving rung schedule, one dispatch per rung, stopping
+  early at ``--target`` if given.
+
+Grid/random emit per-config rows scored on the weighted (DLWA, wear
+spread, p99 tenant latency) objective plus the Pareto front; evolve
+emits one row per generation (best-so-far objective + budget ledger)
+plus the persistent Pareto archive.  Same ``name,us_per_call,derived``
+CSV schema as ``benchmarks/run.py`` (via :class:`benchmarks.common.Bench`).
+The front/archive is also written as JSON (``--out``, default
+``fleet_pareto.json``)::
 
     PYTHONPATH=src python benchmarks/fleet_search.py [--quick]
-        [--devices 4] [--random N --seed S] [--out fleet_pareto.json]
+        [--strategy {grid,random,evolve}] [--devices 4] [--seed S]
+        [--random N] [--population K --generations G] [--target OBJ]
+        [--out fleet_pareto.json]
 
-``--random N`` swaps the grid for N seeded random samples (deterministic
-per seed).  The batched-vs-legacy speedup lives in ``tools/bench.py``
-(artifact ``BENCH_fleet.json``), not here.
+The batched-vs-legacy speedup and the evolve-vs-random
+dispatches-to-target comparison live in ``tools/bench.py`` (artifact
+``BENCH_fleet.json``), not here.
 """
 
 from __future__ import annotations
@@ -38,43 +49,21 @@ from benchmarks.common import Bench
 from repro.core import zn540
 from repro.core.elements import SUPERBLOCK
 from repro.core.engine import ZoneEngine
-from repro.fleet import (evaluate_configs, grid_space, pareto_front,
-                         random_space, score_rows)
+from repro.fleet import (Evaluator, EvolveParams, SearchSpace, evolve,
+                         grid_space, pareto_front, random_space,
+                         score_rows)
 
 DERIVED_KEYS = ("dlwa", "wear_cv", "p99_latency_s", "makespan_s",
                 "block_erases", "score", "pareto")
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--devices", type=int, default=4)
-    ap.add_argument("--random", type=int, default=0,
-                    help="sample N random configs instead of the grid")
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--weights", type=float, nargs=3,
-                    default=(1.0, 1.0, 1.0),
-                    metavar=("W_DLWA", "W_WEAR", "W_P99"))
-    ap.add_argument("--out", type=str, default="fleet_pareto.json",
-                    help="Pareto front JSON ('' to skip)")
-    ap.add_argument("--quick", action="store_true",
-                    help="smaller axes (CI smoke): 8 configs, 3 devices")
-    args = ap.parse_args()
-
-    flash, zone = zn540()
-    eng = ZoneEngine(flash, zone, SUPERBLOCK, max_active=14)
-    if args.quick:
-        axes = dict(segments=(22, 11), chunks=(1536,), parities=(False,),
-                    wear=(True, False))
-        n_devices = 3
-    else:
-        axes = {}
-        n_devices = args.devices
+def run_enumerative(args, eng, axes, n_devices, b: Bench) -> dict:
+    """grid / random: one batched dispatch, Pareto front of the rows."""
     configs = (random_space(args.seed, args.random, **axes)
-               if args.random else grid_space(**axes))
-
-    b = Bench()
+               if args.strategy == "random" else grid_space(**axes))
     t0 = time.perf_counter()
-    rows = evaluate_configs(eng, configs, n_devices=n_devices)
+    ev = Evaluator(eng, n_devices=n_devices, weights=tuple(args.weights))
+    rows = ev.evaluate(configs)
     total_us = (time.perf_counter() - t0) * 1e6
     rows = score_rows(rows, weights=tuple(args.weights))
     front = pareto_front(rows)
@@ -85,21 +74,110 @@ def main() -> None:
               ";".join(f"{k}={r[k]:.4g}" for k in DERIVED_KEYS))
     b.add("fleet_search_total", total_us,
           f"n_configs={len(rows)};n_devices={n_devices};"
-          f"batched_dispatches=2")
+          f"strategy={args.strategy};"
+          f"dispatches={ev.n_dispatches:.0f}")
+    b.add("pareto_front", 0.0, ";".join(r["config"] for r in front))
+    return {
+        "strategy": args.strategy,
+        "weights": list(args.weights),
+        "n_configs": len(rows),
+        "n_devices": n_devices,
+        "ledger": ev.ledger(),
+        "front": front,
+        "best_by_score": rows[0],
+    }
+
+
+def run_evolve(args, eng, axes, n_devices, b: Bench) -> dict:
+    """Adaptive search: one row per generation + the Pareto archive."""
+    space = SearchSpace(**{k: tuple(v) for k, v in axes.items()})
+    params = EvolveParams(population=args.population,
+                          generations=args.generations)
+    t0 = time.perf_counter()
+    res = evolve(eng, space=space, params=params, seed=args.seed,
+                 n_devices=n_devices, weights=tuple(args.weights),
+                 target=args.target)
+    total_us = (time.perf_counter() - t0) * 1e6
+    for h in res.history:
+        b.add(f"evolve_gen{h['generation']}",
+              total_us / len(res.history),
+              f"best_so_far={h['best_so_far']:.4g};"
+              f"best_of_gen={h['best_of_gen']:.4g};"
+              f"dispatches={h['n_dispatches']:.0f};"
+              f"evals={h['n_evals']:.3g};lane_ops={h['lane_ops']:.0f}")
+    b.add("evolve_total", total_us,
+          f"generations={len(res.history)};population={params.population};"
+          f"best={res.best['config']};"
+          f"best_objective={res.history[-1]['best_so_far']:.4g};"
+          f"reached_target={res.reached_target}")
     b.add("pareto_front", 0.0,
-          ";".join(r["config"] for r in front))
+          ";".join(r["config"] for r in res.archive))
+    return {
+        "strategy": "evolve",
+        "weights": list(args.weights),
+        "seed": args.seed,
+        "n_devices": n_devices,
+        "params": {"population": params.population,
+                   "generations": params.generations,
+                   "rung_fidelities": list(params.rung_fidelities),
+                   "eta": params.eta},
+        "ledger": res.ledger,
+        "history": res.history,
+        "front": res.archive,
+        "best_by_score": res.best,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--strategy", choices=("grid", "random", "evolve"),
+                    default="grid")
+    ap.add_argument("--devices", type=int, default=4)
+    ap.add_argument("--random", type=int, default=0,
+                    help="sample N random configs (implies --strategy "
+                         "random; `--strategy random` alone samples "
+                         "as many configs as the grid holds)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--population", type=int, default=8,
+                    help="evolve: candidates per generation")
+    ap.add_argument("--generations", type=int, default=4)
+    ap.add_argument("--target", type=float, default=None,
+                    help="evolve: stop once the objective reaches this")
+    ap.add_argument("--weights", type=float, nargs=3,
+                    default=(1.0, 1.0, 1.0),
+                    metavar=("W_DLWA", "W_WEAR", "W_P99"))
+    ap.add_argument("--out", type=str, default="fleet_pareto.json",
+                    help="Pareto front JSON ('' to skip)")
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller axes (CI smoke): 8 configs, 3 devices")
+    args = ap.parse_args()
+    if args.random and args.strategy == "grid":
+        args.strategy = "random"
+    if args.strategy == "random" and args.random < 1:
+        args.random = len(grid_space())   # sample the grid's size
+
+    flash, zone = zn540()
+    eng = ZoneEngine(flash, zone, SUPERBLOCK, max_active=14)
+    if args.quick:
+        axes = dict(segments=(22, 11), chunks=(1536,), parities=(False,),
+                    wear=(True, False))
+        n_devices = 3
+    else:
+        axes = {}
+        n_devices = args.devices
+
+    b = Bench()
+    if args.strategy == "evolve":
+        report = run_evolve(args, eng, axes, n_devices, b)
+    else:
+        report = run_enumerative(args, eng, axes, n_devices, b)
     b.emit()
 
     if args.out:
-        pathlib.Path(args.out).write_text(json.dumps({
-            "weights": list(args.weights),
-            "n_configs": len(rows),
-            "n_devices": n_devices,
-            "front": front,
-            "best_by_score": rows[0],
-        }, indent=2) + "\n")
-        print(f"# wrote {args.out} ({len(front)} Pareto configs)",
-              file=sys.stderr)
+        pathlib.Path(args.out).write_text(
+            json.dumps(report, indent=2) + "\n")
+        print(f"# wrote {args.out} ({len(report['front'])} Pareto "
+              f"configs)", file=sys.stderr)
 
 
 if __name__ == "__main__":

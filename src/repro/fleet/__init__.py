@@ -10,30 +10,43 @@ The fleet layer turns the repo from "replay the paper's sweeps" into
   executed through ONE batched ``run_programs`` dispatch (heterogeneous
   per-lane geometries/allocators via ``DynConfig``) plus op-granular
   fleet timing;
-* :mod:`repro.fleet.search`  -- grid/random search over (tenant mix,
-  zone geometry, chunk size, parity, wear-awareness) scored on a
-  weighted (DLWA, wear spread, p99 tenant latency) objective, with the
-  Pareto front of non-dominated configs.
+* :mod:`repro.fleet.search`  -- the :class:`SearchSpace` candidate
+  codec and the shared batched :class:`Evaluator` (one dispatch per
+  candidate set, fidelity-truncated programs, budget ledger), plus
+  grid/random enumeration over (tenant mix, zone geometry, chunk size,
+  parity, wear-awareness) scored on a weighted (DLWA, wear spread, p99
+  tenant latency) objective, with the Pareto front of non-dominated
+  configs;
+* :mod:`repro.fleet.evolve`  -- the adaptive strategy: evolutionary
+  proposals (mutation/crossover on the gene vector) with a
+  successive-halving rung schedule, a persistent cross-generation
+  Pareto archive, and seeded determinism.
 
-Entry points: ``benchmarks/fleet_search.py`` (the sweep),
-``examples/fleet.py`` (a small demo), ``tools/bench.py`` (writes the
-batched-vs-legacy speedup artifact ``BENCH_fleet.json`` by default;
-``--skip-engine`` isolates the fleet comparison).
+Entry points: ``benchmarks/fleet_search.py --strategy {grid,random,
+evolve}`` (the sweep), ``examples/fleet.py`` (a small demo),
+``tools/bench.py`` (writes the batched-vs-legacy speedup and the
+evolve-vs-random dispatches-to-target comparison to
+``BENCH_fleet.json``; ``--skip-engine`` isolates the fleet part).
 """
 
-from repro.fleet.runner import FleetResult, config_report, run_fleet
+from repro.fleet.evolve import (EvolveParams, EvolveResult, evolve,
+                                evolve_vs_random)
+from repro.fleet.runner import (FleetResult, config_report,
+                                dispatch_cost, real_op_count, run_fleet)
 from repro.fleet.search import (MIXES, N_TENANTS, OBJECTIVE_KEYS,
-                                FleetConfig, build_fleet_batch,
-                                evaluate_configs, grid_space,
-                                pareto_front, random_space,
+                                Evaluator, FleetConfig, SearchSpace,
+                                build_fleet_batch, evaluate_configs,
+                                grid_space, pareto_front, random_space,
                                 run_configs_legacy, score_rows)
 from repro.fleet.tenants import (TENANT_COL, interleave_tenants,
                                  pad_programs, stripe_program, tag_tenant)
 
 __all__ = [
-    "FleetResult", "config_report", "run_fleet",
-    "MIXES", "N_TENANTS", "OBJECTIVE_KEYS", "FleetConfig",
-    "build_fleet_batch", "evaluate_configs", "grid_space",
+    "EvolveParams", "EvolveResult", "evolve", "evolve_vs_random",
+    "FleetResult", "config_report", "dispatch_cost", "real_op_count",
+    "run_fleet",
+    "MIXES", "N_TENANTS", "OBJECTIVE_KEYS", "Evaluator", "FleetConfig",
+    "SearchSpace", "build_fleet_batch", "evaluate_configs", "grid_space",
     "pareto_front", "random_space", "run_configs_legacy", "score_rows",
     "TENANT_COL", "interleave_tenants", "pad_programs",
     "stripe_program", "tag_tenant",

@@ -166,6 +166,20 @@ def config_report(res: FleetResult, eng: ZoneEngine,
     }
 
 
+def dispatch_cost(res: FleetResult) -> int:
+    """Scanned ``(lane, op)`` cells of one dispatch -- lanes times the
+    padded program length, NOP padding included.  This is the raw
+    compute a batched evaluator invocation paid (every lane scans the
+    full padded op axis), the unit the search-budget ledger in
+    :class:`repro.fleet.search.Evaluator` accumulates."""
+    return int(res.programs.shape[0] * res.programs.shape[1])
+
+
+def real_op_count(res: FleetResult) -> int:
+    """Non-NOP ops across all lanes (the work that moved state)."""
+    return int((res.programs[:, :, 0] != zengine.OP_NOP).sum())
+
+
 def assert_all_ok(res: FleetResult, lanes: Optional[np.ndarray] = None
                   ) -> None:
     """Raise if any *real* op (non-NOP) was illegal -- a mis-built

@@ -25,13 +25,22 @@ Pareto front (:func:`pareto_front`).
 
 Grid enumeration (:func:`grid_space`) and seeded random sampling
 (:func:`random_space`) are both deterministic: same seed, same configs,
-same scores (tested).
+same scores (tested).  Every strategy -- grid, random, and the
+evolutionary/successive-halving searcher in :mod:`repro.fleet.evolve`
+-- scores candidates through one shared :class:`Evaluator`: a
+:class:`SearchSpace` supplies the candidate codec (config <-> gene
+vector), :meth:`Evaluator.evaluate` runs one batched dispatch per
+candidate set (optionally at reduced *fidelity* via truncated op
+programs), and :meth:`Evaluator.objective` is the fixed scalar the
+adaptive strategies minimize.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import itertools
+import math
+import random as pyrandom
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -117,15 +126,61 @@ class FleetConfig:
                 f"_{'wa' if self.wear_aware else 'ff'}")
 
 
+@dataclasses.dataclass(frozen=True)
+class SearchSpace:
+    """The finite design-space axes plus the candidate *gene* codec.
+
+    A candidate is a :class:`FleetConfig`; its gene vector is the tuple
+    of per-axis indexes (one int per axis, in axis order).  The codec
+    is what the evolutionary operators in :mod:`repro.fleet.evolve`
+    mutate/cross over, so every strategy shares one source of truth for
+    which configs exist.
+    """
+
+    mixes: Tuple[str, ...] = tuple(MIXES)
+    segments: Tuple[int, ...] = (22, 11)
+    chunks: Tuple[int, ...] = (1536, 3072)
+    parities: Tuple[bool, ...] = (False, True)
+    wear: Tuple[bool, ...] = (True, False)
+
+    @property
+    def axes(self) -> Tuple[Tuple, ...]:
+        return (self.mixes, self.segments, self.chunks, self.parities,
+                self.wear)
+
+    def __len__(self) -> int:
+        return math.prod(len(a) for a in self.axes)
+
+    def decode(self, genes: Sequence[int]) -> FleetConfig:
+        """Per-axis index vector -> config (indexes taken modulo each
+        axis length, so any int vector decodes)."""
+        vals = [axis[g % len(axis)] for axis, g in zip(self.axes, genes)]
+        return FleetConfig(*vals)
+
+    def encode(self, fc: FleetConfig) -> Tuple[int, ...]:
+        """Config -> per-axis index vector (raises if off the axes)."""
+        vals = (fc.mix, fc.n_segments, fc.chunk_pages, fc.parity,
+                fc.wear_aware)
+        return tuple(axis.index(v) for axis, v in zip(self.axes, vals))
+
+    def grid(self) -> List[FleetConfig]:
+        """Full cross product, axis-major order."""
+        return [FleetConfig(m, s, c, p, w)
+                for m, s, c, p, w in itertools.product(*self.axes)]
+
+    def sample_genes(self, rng: pyrandom.Random) -> Tuple[int, ...]:
+        """One uniform gene vector from a seeded ``random.Random``."""
+        return tuple(rng.randrange(len(a)) for a in self.axes)
+
+
 def grid_space(*, mixes: Sequence[str] = tuple(MIXES),
                segments: Sequence[int] = (22, 11),
                chunks: Sequence[int] = (1536, 3072),
                parities: Sequence[bool] = (False, True),
                wear: Sequence[bool] = (True, False)) -> List[FleetConfig]:
     """Full cross product (defaults: 2*2*2*2*2 = 32 configs on zn540)."""
-    return [FleetConfig(m, s, c, p, w)
-            for m, s, c, p, w in itertools.product(
-                mixes, segments, chunks, parities, wear)]
+    return SearchSpace(tuple(mixes), tuple(segments), tuple(chunks),
+                       tuple(parities), tuple(wear)).grid()
 
 
 def random_space(seed: int, n: int, *,
@@ -145,7 +200,8 @@ def random_space(seed: int, n: int, *,
 
 
 def build_fleet_batch(eng: ZoneEngine, configs: Sequence[FleetConfig],
-                      *, n_devices: int
+                      *, n_devices: int, fidelity: float = 1.0,
+                      pad_quantum: int = 1
                       ) -> Tuple[np.ndarray, object, List[np.ndarray]]:
     """Expand configs to the rectangular lane batch of one dispatch.
 
@@ -154,7 +210,20 @@ def build_fleet_batch(eng: ZoneEngine, configs: Sequence[FleetConfig],
     program of config ``k`` (tenants interleaved, superzone-addressed,
     pre-striping) is what the per-op legacy comparator replays through a
     real ``ZNSArray`` -- both paths execute identical logical traffic.
+
+    ``fidelity`` < 1 truncates each merged logical program to its first
+    ``ceil(fidelity * n_rows)`` rows *before* striping -- the low-cost
+    rung evaluation of the successive-halving searcher.  A prefix of a
+    legal program is legal, so truncated lanes still pass
+    ``assert_all_ok``; their metrics are comparable only within the
+    same fidelity.
+
+    ``pad_quantum`` rounds the padded op axis up to a multiple (NOP
+    rows are inert), so repeated same-size batches hit one compiled
+    ``run_programs`` shape -- see :class:`Evaluator`.
     """
+    if not 0.0 < fidelity <= 1.0:
+        raise ValueError(f"fidelity must be in (0, 1], got {fidelity}")
     if eng.cfg.kind is ElementKind.FIXED:
         raise ValueError("FIXED elements span the whole static zone and "
                          "cannot take an effective-capacity override")
@@ -172,6 +241,8 @@ def build_fleet_batch(eng: ZoneEngine, configs: Sequence[FleetConfig],
         tenant_progs = MIXES[fc.mix](eng, cap)
         merged = interleave_tenants(
             [tag_tenant(p, t) for t, p in enumerate(tenant_progs)])
+        if fidelity < 1.0:
+            merged = merged[: max(1, math.ceil(fidelity * len(merged)))]
         merged_per_config.append(merged)
         lane_programs += stripe_program(
             merged, n_devices=n_devices, chunk_pages=fc.chunk_pages,
@@ -179,35 +250,109 @@ def build_fleet_batch(eng: ZoneEngine, configs: Sequence[FleetConfig],
             parity_tenant=N_TENANTS)
         dyns += [eng.dyn(zone_pages=member_zp,
                          wear_aware=fc.wear_aware)] * n_devices
-    return pad_programs(lane_programs), stack_dyn(dyns), merged_per_config
+    q = max(1, pad_quantum)
+    n_ops = -(-max((len(p) for p in lane_programs), default=0) // q) * q
+    return (pad_programs(lane_programs, n_ops=n_ops), stack_dyn(dyns),
+            merged_per_config)
+
+
+class Evaluator:
+    """The one batched scorer every search strategy dispatches through.
+
+    Grid/random enumeration, and the evolutionary/successive-halving
+    searcher in :mod:`repro.fleet.evolve`, all share this object: it
+    owns candidate expansion (:func:`build_fleet_batch`), the batched
+    execution + per-config rollups, the fixed scalar objective, and the
+    budget ledger.  One :meth:`evaluate` call is one *dispatch*: one
+    batched ``run_programs`` + one batched timing invocation, whatever
+    the candidate count or fidelity.
+
+    Budget ledger (cumulative, read by benchmarks/tests):
+
+    * ``n_dispatches`` -- :meth:`evaluate` calls issued;
+    * ``n_evals``      -- full-fidelity-equivalent config evaluations
+      (a config at fidelity ``f`` costs ``f``), the unit the
+      dispatches-to-target comparison in ``BENCH_fleet.json`` uses;
+    * ``lane_ops``     -- scanned ``(lane, op)`` cells actually
+      dispatched (lanes x padded program length), the raw compute
+      proxy.
+
+    ``pad_quantum`` rounds every dispatch's op axis up to a multiple,
+    so repeated same-size candidate sets (evolve generations, halving
+    rungs) hit the same compiled ``run_programs`` shape instead of
+    recompiling per batch.
+    """
+
+    def __init__(self, eng: ZoneEngine, *, n_devices: int = 4,
+                 weights: Tuple[float, float, float] = (1.0, 1.0, 1.0),
+                 check_legal: bool = True, pad_quantum: int = 64):
+        self.eng = eng
+        self.n_devices = n_devices
+        self.weights = tuple(weights)
+        self.check_legal = check_legal
+        self.pad_quantum = max(1, pad_quantum)
+        self.n_dispatches = 0
+        self.n_evals = 0.0
+        self.lane_ops = 0
+
+    def evaluate(self, configs: Sequence[FleetConfig], *,
+                 fidelity: float = 1.0) -> List[Dict]:
+        """Score ``configs`` in ONE batched dispatch; one metrics row
+        per config (see :func:`repro.fleet.runner.config_report`), each
+        stamped with ``fidelity``."""
+        programs, dyn, _ = build_fleet_batch(
+            self.eng, configs, n_devices=self.n_devices,
+            fidelity=fidelity, pad_quantum=self.pad_quantum)
+        res = runner.run_fleet(self.eng, programs, dyn=dyn,
+                               n_tenants=N_TENANTS)
+        if self.check_legal:
+            runner.assert_all_ok(res)
+        self.n_dispatches += 1
+        self.n_evals += fidelity * len(configs)
+        self.lane_ops += runner.dispatch_cost(res)
+        rows = []
+        for k, fc in enumerate(configs):
+            lanes = np.arange(k * self.n_devices, (k + 1) * self.n_devices)
+            row: Dict = {
+                "config": fc.describe(),
+                "mix": fc.mix,
+                "n_segments": fc.n_segments,
+                "chunk_pages": fc.chunk_pages,
+                "parity": float(fc.parity),
+                "wear_aware": float(fc.wear_aware),
+                "n_devices": float(self.n_devices),
+                "fidelity": float(fidelity),
+            }
+            row.update(runner.config_report(res, self.eng, lanes))
+            rows.append(row)
+        return rows
+
+    def objective(self, row: Dict) -> float:
+        """Fixed weighted sum of the raw objectives (lower = better).
+
+        Unlike :func:`score_rows` (which min-max-normalizes *within* a
+        batch), this scalar is comparable across dispatches and
+        generations -- the quantity adaptive strategies minimize and
+        the monotone best-so-far curve is measured on.  Comparable only
+        between rows of equal ``fidelity``.
+        """
+        return float(sum(w * row[k]
+                         for k, w in zip(OBJECTIVE_KEYS, self.weights)))
+
+    def ledger(self) -> Dict[str, float]:
+        """The budget counters as a plain dict (for artifacts)."""
+        return {"n_dispatches": float(self.n_dispatches),
+                "n_evals": float(self.n_evals),
+                "lane_ops": float(self.lane_ops)}
 
 
 def evaluate_configs(eng: ZoneEngine, configs: Sequence[FleetConfig], *,
                      n_devices: int = 4,
                      check_legal: bool = True) -> List[Dict]:
     """Score every config in ONE batched engine dispatch + ONE batched
-    timing dispatch; returns one metrics row per config (see
-    :func:`repro.fleet.runner.config_report`)."""
-    programs, dyn, _ = build_fleet_batch(eng, configs,
-                                         n_devices=n_devices)
-    res = runner.run_fleet(eng, programs, dyn=dyn, n_tenants=N_TENANTS)
-    if check_legal:
-        runner.assert_all_ok(res)
-    rows = []
-    for k, fc in enumerate(configs):
-        lanes = np.arange(k * n_devices, (k + 1) * n_devices)
-        row: Dict = {
-            "config": fc.describe(),
-            "mix": fc.mix,
-            "n_segments": fc.n_segments,
-            "chunk_pages": fc.chunk_pages,
-            "parity": float(fc.parity),
-            "wear_aware": float(fc.wear_aware),
-            "n_devices": float(n_devices),
-        }
-        row.update(runner.config_report(res, eng, lanes))
-        rows.append(row)
-    return rows
+    timing dispatch (a single-shot :class:`Evaluator`)."""
+    return Evaluator(eng, n_devices=n_devices,
+                     check_legal=check_legal).evaluate(configs)
 
 
 def score_rows(rows: List[Dict],
@@ -310,7 +455,10 @@ def run_configs_legacy(flash: FlashGeometry, spec: ElementSpec,
 
 def fleet_vs_legacy_speedup(*, n_devices: int = 4,
                             configs: Optional[Sequence[FleetConfig]] = None,
-                            repeats: int = 3) -> Dict[str, float]:
+                            repeats: int = 3,
+                            flash: Optional[FlashGeometry] = None,
+                            zone_geom: Optional[ZoneGeometry] = None,
+                            max_active: int = 14) -> Dict[str, float]:
     """Time the batched fleet sweep against the per-op legacy pipeline.
 
     Both paths evaluate the *same* configs on the *same* logical
@@ -337,8 +485,11 @@ def fleet_vs_legacy_speedup(*, n_devices: int = 4,
     from repro.core.elements import SUPERBLOCK
     from repro.core.geometry import zn540
 
-    flash, zone_geom = zn540()
-    eng = ZoneEngine(flash, zone_geom, SUPERBLOCK, max_active=14)
+    if (flash is None) != (zone_geom is None):
+        raise ValueError("flash and zone_geom must be given together")
+    if flash is None:
+        flash, zone_geom = zn540()
+    eng = ZoneEngine(flash, zone_geom, SUPERBLOCK, max_active=max_active)
     if configs is None:
         configs = grid_space()
     programs, dyn, merged = build_fleet_batch(eng, configs,
@@ -352,7 +503,7 @@ def fleet_vs_legacy_speedup(*, n_devices: int = 4,
         return run_configs_legacy(
             flash, SUPERBLOCK, configs, merged,
             parallelism=zone_geom.parallelism, n_devices=n_devices,
-            fleet_timing=fleet_timing)
+            max_active=max_active, fleet_timing=fleet_timing)
 
     rows = engine_pass()      # compile/warm both paths
     legacy = legacy_pass()

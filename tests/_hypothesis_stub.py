@@ -5,8 +5,9 @@ pinned CI/tier-1 image does not ship it, and installing packages is not
 an option there).  It covers exactly the surface this repo's property
 tests use -- ``@settings(max_examples=..., deadline=...)``, ``@given``
 over positional strategies, and ``st.integers`` / ``st.floats`` /
-``st.sampled_from`` (plus ``.map``) -- by enumerating a fixed number of
-seeded pseudo-random examples.  No shrinking, no example database: a
+``st.sampled_from`` / ``st.booleans`` / ``st.tuples`` / ``st.lists``
+(plus ``.map``) -- by enumerating a fixed number of seeded
+pseudo-random examples.  No shrinking, no example database: a
 failure reports the concrete arguments via the assertion itself.
 """
 
@@ -50,11 +51,25 @@ def booleans() -> _Strategy:
     return _Strategy(lambda rng: bool(rng.getrandbits(1)))
 
 
+def tuples(*strats: _Strategy) -> _Strategy:
+    return _Strategy(lambda rng: tuple(s.example(rng) for s in strats))
+
+
+def lists(elements: _Strategy, *, min_size: int = 0,
+          max_size: int = 10) -> _Strategy:
+    def draw(rng: random.Random):
+        n = rng.randint(min_size, max_size)
+        return [elements.example(rng) for _ in range(n)]
+    return _Strategy(draw)
+
+
 strategies = types.ModuleType("hypothesis.strategies")
 strategies.integers = integers
 strategies.floats = floats
 strategies.sampled_from = sampled_from
 strategies.booleans = booleans
+strategies.tuples = tuples
+strategies.lists = lists
 
 
 def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None,

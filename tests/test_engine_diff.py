@@ -124,6 +124,66 @@ def test_differential_random_op_sequences(seed, spec_i):
                           np.asarray(dev.state.elem_wear))
 
 
+#: one fuzz op row: (opcode, zone, n_pages, host).  n_pages ranges past
+#: the tiny geometry's 32-page zone so overflow writes (illegal) mix
+#: with legal fills; dummy (host=False) writes exercise the
+#: dummy-page accounting paths.
+_FUZZ_ROW = st.tuples(
+    st.sampled_from([E.OP_WRITE, E.OP_FINISH, E.OP_RESET]),
+    st.integers(0, 3),
+    st.integers(1, 34),
+    st.booleans(),
+)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, len(SPECS) - 1), st.integers(1, 4),
+       st.lists(_FUZZ_ROW, min_size=1, max_size=40))
+def test_differential_fuzz_programs(spec_i, max_active, rows):
+    """Strategy-generated mixed valid/illegal programs: the legacy
+    device, the engine-backed shim, and ONE ``run_program`` scan must
+    leave exactly the same device state, and the scan's per-op ``ok``
+    flags must line up with where the legacy device raised.  (Degrades
+    to the seeded ``_hypothesis_stub`` enumeration when hypothesis is
+    not installed.)"""
+    spec = SPECS[spec_i]
+    flash = tiny_flash()
+    zone = ZoneGeometry(parallelism=4, n_segments=2)
+    dev = ZNSDevice(flash, zone, spec, max_active=max_active)
+    leg = LegacyZNSDevice(flash, zone, spec, max_active=max_active)
+    legal = []
+    for i, (op, z, n, host) in enumerate(rows):
+        outcomes = []
+        for d in (dev, leg):
+            try:
+                if op == E.OP_WRITE:
+                    d.zone_write(z, n, host=host)
+                elif op == E.OP_FINISH:
+                    d.zone_finish(z)
+                else:
+                    d.zone_reset(z)
+                outcomes.append(True)
+            except RuntimeError:
+                outcomes.append(False)
+        ctx = f"spec={spec.name} ma={max_active} i={i} row={rows[i]}"
+        assert outcomes[0] == outcomes[1], ctx
+        legal.append(outcomes[1])
+        assert_same_device_state(dev, leg, ctx)
+    prog = E.encode_program(
+        [(op, z, n, E.F_HOST if host else 0)
+         for op, z, n, host in rows])
+    eng = dev.engine
+    state, trace = eng.run(eng.init_state(), prog)
+    ctx = f"spec={spec.name} ma={max_active}"
+    assert_scan_matches_legacy(eng, state, leg, ctx)
+    # ok=0 exactly where the legacy device raised (WRITE-only; FINISH /
+    # RESET never raise and always report ok)
+    assert np.asarray(trace.ok).tolist() == legal, ctx
+    # the scan's final pytree equals the shim's, leaf for leaf
+    for mine, shim in zip(state, dev.state):
+        assert np.array_equal(np.asarray(mine), np.asarray(shim)), ctx
+
+
 @pytest.mark.parametrize("spec", [BLOCK, vchunk(2), SUPERBLOCK, FIXED],
                          ids=lambda s: s.name)
 def test_differential_wear_oblivious_allocation(spec):

@@ -10,11 +10,15 @@ Two tracked trajectories, each written as a JSON artifact:
   (``repro.fleet``) through one batched ``run_programs`` + one batched
   op-granular timing dispatch vs the per-config legacy pipeline
   (``ZNSArray`` over stateful-Python members + page-granular
-  ``run_fleet_trace``, the ``benchmarks/raid_zns.py`` way) -- this PR's
-  gate: fleet sweep >= 5x.
+  ``run_fleet_trace``, the ``benchmarks/raid_zns.py`` way) -- PR 3's
+  gate: fleet sweep >= 5x.  Since PR 4 the artifact also carries an
+  ``evolve`` section: the adaptive searcher's dispatched budget to
+  reach the best objective of a 32-config random search
+  (``repro.fleet.evolve.evolve_vs_random``; gate: target reached with
+  <= half the random baseline's full-fidelity-equivalent evals).
 
-Both comparisons assert metric agreement between the paths before
-timing anything.  Usage::
+Both speedup comparisons assert metric agreement between the paths
+before timing anything.  Usage::
 
     PYTHONPATH=src python tools/bench.py [--quick] [--repeats 3]
         [--out BENCH_zoneengine.json] [--fleet-out BENCH_fleet.json]
@@ -95,13 +99,28 @@ def bench_engine(args) -> int:
 
 
 def bench_fleet(args) -> int:
+    from repro.core.elements import SUPERBLOCK
+    from repro.core.engine import ZoneEngine
+    from repro.core.geometry import zn540
+    from repro.fleet import SearchSpace, evolve_vs_random
+
     configs = None
+    space = SearchSpace()
     if args.quick:
         configs = grid_space(segments=(22, 11), chunks=(1536,),
                              parities=(False, True), wear=(True,))
+        space = SearchSpace(chunks=(1536,), parities=(False, True))
     rep = fleet_vs_legacy_speedup(configs=configs, repeats=args.repeats)
+
+    # adaptive search: dispatched budget to reach the random-32 target
+    flash, zone = zn540()
+    eng = ZoneEngine(flash, zone, SUPERBLOCK, max_active=14)
+    evo = evolve_vs_random(eng, space=space, random_n=32, seed=0,
+                           n_devices=4)
+
     artifact = {
         "fleet_sweep": rep,
+        "evolve": evo,
         "meta": _meta(repeats=args.repeats, quick=bool(args.quick)),
     }
     args.fleet_out.write_text(json.dumps(artifact, indent=2) + "\n")
@@ -110,12 +129,26 @@ def bench_fleet(args) -> int:
           f"legacy {rep['legacy_s']:.2f}s vs engine {rep['engine_s']:.2f}s "
           f"-> speedup {rep['speedup']:.1f}x "
           f"(replay-only {rep['replay_speedup']:.1f}x)")
+    print(f"evolve: target {evo['random']['best_objective']:.4f} "
+          f"({'reached' if evo['evolve']['reached_target'] else 'MISSED'}) "
+          f"with {evo['evolve']['n_evals']:.1f} evals / "
+          f"{evo['evolve']['n_dispatches']:.0f} dispatches vs random's "
+          f"{evo['random']['n_evals']:.0f} / "
+          f"{evo['random']['n_dispatches']:.0f} "
+          f"-> {evo['n_evals_savings']:.1f}x eval savings")
     print(f"wrote {args.fleet_out}")
-    # this PR's acceptance bar: batched fleet sweep >= 5x
+    rc = 0
+    # PR 3's acceptance bar: batched fleet sweep >= 5x
     if rep["speedup"] < 5.0:
         print("WARNING: fleet speedup below the 5x target", file=sys.stderr)
-        return 1
-    return 0
+        rc = 1
+    # PR 4's acceptance bar: random-best matched on <= half the evals
+    if (not evo["evolve"]["reached_target"]
+            or evo["n_evals_savings"] < 2.0):
+        print("WARNING: evolve missed the <=half-budget-to-random-best "
+              "target", file=sys.stderr)
+        rc = 1
+    return rc
 
 
 def main() -> int:
