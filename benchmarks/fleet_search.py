@@ -1,13 +1,17 @@
-"""Fleet allocator search: tenant-mix x geometry x allocator, one dispatch.
+"""Fleet allocator search: tenant-mix x geometry x spec x allocator.
 
 Three strategies over the same :class:`repro.fleet.SearchSpace` (2
 tenant mixes x 2 effective zone geometries x 2 stripe-chunk sizes x
-parity on/off x wear-aware/first-fit, each config expanded to
-``--devices`` member lanes), all scored through the shared batched
-:class:`repro.fleet.Evaluator`:
+parity on/off x wear-aware/first-fit x ``--specs`` element specs, each
+config expanded to ``--devices`` member lanes), all scored through the
+shared batched :class:`repro.fleet.Evaluator`.  With more than one
+element spec the engine is built over the padded *union* config, so a
+mixed SUPERBLOCK+BLOCK+VCHUNK fleet still runs in ONE ``run_programs``
+dispatch (per-lane ``DynConfig`` spec selection):
 
-* ``--strategy grid``   -- the full cross product (32 configs on
-  zn540) in ONE batched ``run_programs`` + ONE timing dispatch;
+* ``--strategy grid``   -- the full cross product (96 configs on
+  zn540 with the default 3-spec axis) in ONE batched ``run_programs``
+  + ONE timing dispatch;
 * ``--strategy random`` -- ``--random N`` seeded samples, one dispatch;
 * ``--strategy evolve`` -- the adaptive searcher
   (:mod:`repro.fleet.evolve`): evolutionary proposals with a
@@ -25,7 +29,7 @@ The front/archive is also written as JSON (``--out``, default
     PYTHONPATH=src python benchmarks/fleet_search.py [--quick]
         [--strategy {grid,random,evolve}] [--devices 4] [--seed S]
         [--random N] [--population K --generations G] [--target OBJ]
-        [--out fleet_pareto.json]
+        [--specs superblock,block,vchunk2] [--out fleet_pareto.json]
 
 The batched-vs-legacy speedup and the evolve-vs-random
 dispatches-to-target comparison live in ``tools/bench.py`` (artifact
@@ -47,7 +51,8 @@ for _p in (str(_ROOT), str(_ROOT / "src")):
 
 from benchmarks.common import Bench
 from repro.core import zn540
-from repro.core.elements import SUPERBLOCK
+from repro.core.elements import (BLOCK, SUPERBLOCK, ElementSpec, hchunk,
+                                 vchunk)
 from repro.core.engine import ZoneEngine
 from repro.fleet import (Evaluator, EvolveParams, SearchSpace, evolve,
                          grid_space, pareto_front, random_space,
@@ -55,6 +60,22 @@ from repro.fleet import (Evaluator, EvolveParams, SearchSpace, evolve,
 
 DERIVED_KEYS = ("dlwa", "wear_cv", "p99_latency_s", "makespan_s",
                 "block_erases", "score", "pareto")
+
+
+def parse_spec(name: str) -> ElementSpec:
+    """``superblock`` / ``block`` / ``vchunkN`` / ``hchunkN`` -> spec
+    (FIXED cannot join a per-lane union and is not accepted)."""
+    name = name.strip().lower()
+    if name == "superblock":
+        return SUPERBLOCK
+    if name == "block":
+        return BLOCK
+    for prefix, build in (("vchunk", vchunk), ("hchunk", hchunk)):
+        if name.startswith(prefix) and name[len(prefix):].isdigit():
+            return build(int(name[len(prefix):]))
+    raise argparse.ArgumentTypeError(
+        f"unknown element spec {name!r} (want superblock, block, "
+        f"vchunkN or hchunkN)")
 
 
 def run_enumerative(args, eng, axes, n_devices, b: Bench) -> dict:
@@ -146,25 +167,36 @@ def main() -> None:
     ap.add_argument("--weights", type=float, nargs=3,
                     default=(1.0, 1.0, 1.0),
                     metavar=("W_DLWA", "W_WEAR", "W_P99"))
+    ap.add_argument("--specs", type=str,
+                    default="superblock,block,vchunk2",
+                    help="comma-separated element-spec axis; >1 spec "
+                         "builds the padded union engine (mixed-spec "
+                         "lanes, one dispatch)")
     ap.add_argument("--out", type=str, default="fleet_pareto.json",
                     help="Pareto front JSON ('' to skip)")
     ap.add_argument("--quick", action="store_true",
                     help="smaller axes (CI smoke): 8 configs, 3 devices")
     args = ap.parse_args()
+    try:
+        specs = tuple(parse_spec(s) for s in args.specs.split(","))
+    except argparse.ArgumentTypeError as exc:
+        ap.error(str(exc))   # clean usage error, not a raw traceback
     if args.random and args.strategy == "grid":
         args.strategy = "random"
     if args.strategy == "random" and args.random < 1:
-        args.random = len(grid_space())   # sample the grid's size
+        args.random = len(grid_space(specs=specs))  # the grid's size
 
     flash, zone = zn540()
-    eng = ZoneEngine(flash, zone, SUPERBLOCK, max_active=14)
     if args.quick:
+        specs = specs[:1]
         axes = dict(segments=(22, 11), chunks=(1536,), parities=(False,),
-                    wear=(True, False))
+                    wear=(True, False), specs=specs)
         n_devices = 3
     else:
-        axes = {}
+        axes = dict(specs=specs)
         n_devices = args.devices
+    eng = ZoneEngine(flash, zone, specs if len(specs) > 1 else specs[0],
+                     max_active=14)
 
     b = Bench()
     if args.strategy == "evolve":

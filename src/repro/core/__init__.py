@@ -9,8 +9,9 @@ from repro.core.elements import (ElementKind, ElementSpec, ElementLayout,
                                  is_applicable)
 from repro.core.device import ZNSDevice, ZoneState, ZoneInfo, IOTrace
 from repro.core.engine import (DeviceState, DynConfig, EngineConfig,
-                               OpTrace, ZoneEngine, encode_program,
-                               make_dyn, stack_dyn)
+                               OpTrace, SpecValues, ZoneEngine,
+                               encode_program, make_dyn,
+                               make_union_config, stack_dyn)
 from repro.core.backend import ZoneBackend, check_backend
 from repro.core.allocator import (select_lowest_wear, allocate, RoundRobin,
                                   eligible_mask)
@@ -23,8 +24,9 @@ __all__ = [
     "FIXED", "hchunk", "vchunk", "PAPER_ELEMENTS", "build_layout",
     "elements_per_zone", "groups_per_zone", "is_applicable",
     "ZNSDevice", "ZoneState", "ZoneInfo", "IOTrace",
-    "DeviceState", "DynConfig", "EngineConfig", "OpTrace", "ZoneEngine",
-    "encode_program", "make_dyn", "stack_dyn",
+    "DeviceState", "DynConfig", "EngineConfig", "OpTrace", "SpecValues",
+    "ZoneEngine", "encode_program", "make_dyn", "make_union_config",
+    "stack_dyn",
     "ZoneBackend", "check_backend",
     "select_lowest_wear", "allocate", "RoundRobin", "eligible_mask",
     "alloc_exact", "engine", "metrics", "timing", "workloads", "zns",

@@ -203,6 +203,35 @@ def groups_per_zone(layout: ElementLayout, zone: ZoneGeometry) -> int:
     return zone.parallelism // layout.luns_per_group
 
 
+def union_grid_ids(n_elements: int, per_group: int,
+                   grid_per_group: int) -> np.ndarray:
+    """Dense element ids of one union member -> union-grid positions.
+
+    A padded union layout (one static config hosting several element
+    specs per lane) stores member element ``(g, c)`` at grid id
+    ``g * grid_per_group + c``; for members whose group width equals
+    the grid's (BLOCK / VCHUNK / SUPERBLOCK all share
+    ``per_group = blocks_per_lun``) this is the identity prefix.
+    """
+    ids = np.arange(n_elements, dtype=np.int64)
+    return (ids // per_group) * grid_per_group + ids % per_group
+
+
+def union_grid_mask(grid_n_elements: int, grid_per_group: int,
+                    n_elements, per_group) -> np.ndarray:
+    """Boolean mask of the union grid's *real* cells for one member
+    spec (or, with ``(L,)`` arrays, one row per batch lane): groups
+    below ``n_elements // per_group`` and columns below ``per_group``;
+    everything else is padding the allocator never touches."""
+    ids = np.arange(grid_n_elements, dtype=np.int64)
+    g, c = ids // grid_per_group, ids % grid_per_group
+    ne = np.asarray(n_elements, dtype=np.int64)
+    pg = np.asarray(per_group, dtype=np.int64)
+    if ne.ndim:
+        g, c, ne, pg = g[None, :], c[None, :], ne[:, None], pg[:, None]
+    return (g < ne // pg) & (c < pg)
+
+
 def is_applicable(spec: ElementSpec, zone: ZoneGeometry, flash: FlashGeometry) -> bool:
     """Paper Tables 3-4 mark some (geometry, element) cells N/A:
     superblock needs P == L; hchunk-s needs n_segments % s == 0 (an hchunk

@@ -26,15 +26,19 @@ opens the zone) and report ``ok=0`` in the trace.
 
 Static configuration is a frozen hashable :class:`EngineConfig`, so the
 jitted transitions are compile-cached *per device geometry/spec*, not per
-engine instance.  A small subset of the config -- the knobs that affect
+engine instance.  A subset of the config -- the knobs that affect
 *values* but not *array shapes* -- can additionally be overridden per
 call (and per batch lane) with a traced :class:`DynConfig`: effective
 zone capacity in pages, the active-zone limit, the addressable zone
-count, and the allocator's wear-awareness.  This is what lets a single
-``run_programs`` dispatch batch a *heterogeneous* fleet: every lane
-shares the padded static shapes of the largest geometry while its
-``DynConfig`` selects the member's effective geometry/allocator (see
-:mod:`repro.fleet`).
+count, the allocator's wear-awareness, and (since the union-config
+extension) the whole *element spec*: ``n_elements`` / ``per_group`` /
+``take`` / ``zone_groups`` / ``slot_stride`` / ``pages_per_element``
+become per-lane values on a padded static layout built at the max
+geometry of a spec set (:func:`make_union_config`).  This is what lets
+a single ``run_programs`` dispatch batch a *heterogeneous* fleet:
+every lane shares the padded static shapes of the largest
+geometry/spec while its ``DynConfig`` selects the member's effective
+element granularity, geometry and allocator (see :mod:`repro.fleet`).
 
 Units: ``n_pages``/``zone_pages``/``wp`` count flash pages; ``wear`` and
 ``block_erases`` count erase-block erasures; zones and elements are
@@ -56,7 +60,7 @@ from repro.core.alloc_exact import (AVAIL_ALLOCATED, AVAIL_FREE,
                                     AVAIL_INVALID, AVAIL_VALID)
 from repro.core.elements import (ElementKind, ElementLayout, ElementSpec,
                                  build_layout, elements_per_zone,
-                                 groups_per_zone)
+                                 groups_per_zone, union_grid_ids)
 from repro.core.geometry import FlashGeometry, ZoneGeometry
 
 # ----------------------------------------------------------------------- #
@@ -74,6 +78,22 @@ _BIG = 2**30  # sentinel wear for unavailable slots (matches allocator.py)
 # static config + state pytree
 # ----------------------------------------------------------------------- #
 @dataclasses.dataclass(frozen=True)
+class SpecValues:
+    """The value-only, spec-derived subset of :class:`EngineConfig`:
+    everything one element spec contributes that a lane can shadow
+    through a :class:`DynConfig` on a padded union layout.  All ints;
+    ``pages_per_element`` in pages, the rest count elements / groups /
+    slots."""
+
+    n_elements: int
+    per_group: int
+    take: int
+    zone_groups: int
+    slot_stride: int
+    pages_per_element: int
+
+
+@dataclasses.dataclass(frozen=True)
 class EngineConfig:
     """Hashable static description of one device geometry/element spec.
 
@@ -82,8 +102,15 @@ class EngineConfig:
     ``zone_pages``, ``pages_per_element``; block-unit:
     ``blocks_per_element``; the rest count elements / groups / zones /
     LUN columns.  The *value-only* subset (``zone_pages``,
-    ``max_active``, ``n_zones``, ``wear_aware``) can be shadowed per
-    call by a :class:`DynConfig`.
+    ``max_active``, ``n_zones``, ``wear_aware``, plus the spec-derived
+    :class:`SpecValues` fields) can be shadowed per call by a
+    :class:`DynConfig`.
+
+    ``members`` lists the element specs this config can host per lane:
+    a plain :func:`make_config` has exactly its own spec; a
+    :func:`make_union_config` built at the max geometry of a spec set
+    has one entry per member, each carrying the member's
+    :class:`SpecValues`.
     """
 
     kind: ElementKind
@@ -106,10 +133,21 @@ class EngineConfig:
     n_zones: int
     max_active: int
     n_channels: int
+    members: Tuple[Tuple[ElementSpec, SpecValues], ...] = ()
 
     @property
     def spec(self) -> ElementSpec:
         return ElementSpec(self.kind, self.chunk)
+
+    def member_values(self, spec: ElementSpec) -> SpecValues:
+        """The :class:`SpecValues` of a member spec (raises
+        ``ValueError`` for a spec this config was not built over)."""
+        for s, v in self.members:
+            if s == spec:
+                return v
+        raise ValueError(
+            f"spec {spec.name} is not a member of this config "
+            f"(members: {[s.name for s, _ in self.members]})")
 
 
 class DeviceState(NamedTuple):
@@ -164,23 +202,101 @@ class DynConfig(NamedTuple):
       whose per-element page capacity is segment-count-independent
       (BLOCK / VCHUNK / HCHUNK / SUPERBLOCK); FIXED elements *are* the
       whole static zone, so FIXED lanes must keep the full capacity.
-    * ``max_active``  -- () i32, open/active-zone limit.
+    * ``max_active``  -- () i32, open/active-zone limit
+      (``<= cfg.max_active``).
     * ``n_zones``     -- () i32, addressable zones (``<= cfg.n_zones``);
       op rows are clipped into ``[0, n_zones)``.
     * ``wear_aware``  -- () bool, allocator policy: lowest-(wear, col)
       selection when true, first-fit by column when false.
+
+    The spec axis (all () i32, defaulting to the primary member's
+    bundle -- a plain config's own spec; select another union member
+    with ``make_dyn(cfg, spec=...)``):
+
+    * ``n_elements`` / ``per_group`` -- the lane's element count and
+      group width.  A lane's element ``(g, c)`` lives at union id
+      ``g * cfg.per_group + c``; columns ``>= per_group`` and groups
+      ``>= n_elements // per_group`` of the padded grid are never
+      allocated (they are selection-masked, not state-marked, because
+      every lane of a batch shares one initial state).
+    * ``take`` / ``zone_groups`` / ``slot_stride`` -- the lane's zone
+      composition: ``zone_groups`` winning groups each contribute
+      ``take`` elements, element rank ``r`` of window position ``p``
+      mapping to zone slot ``r * slot_stride + p``.
+    * ``pages_per_element`` -- the FINISH padding capacity per element;
+      also derives the lane's per-(segment, column) slot map and its
+      ``blocks_per_element = pages_per_element // cfg.pages_per_block``
+      wear increment.
+
+    All six are *values* on the padded static shapes, which is what
+    lets one ``run_programs`` dispatch mix element specs per lane --
+    element-exact vs a device built with the member spec outright
+    (tested in ``tests/test_union_spec.py``).
     """
 
     zone_pages: jax.Array
     max_active: jax.Array
     n_zones: jax.Array
     wear_aware: jax.Array
+    n_elements: jax.Array
+    per_group: jax.Array
+    take: jax.Array
+    zone_groups: jax.Array
+    slot_stride: jax.Array
+    pages_per_element: jax.Array
 
 
 def make_dyn(cfg: EngineConfig, *, zone_pages: Optional[int] = None,
              max_active: Optional[int] = None, n_zones: Optional[int] = None,
-             wear_aware: Optional[bool] = None) -> DynConfig:
-    """A :class:`DynConfig` defaulting every field to ``cfg``'s value."""
+             wear_aware: Optional[bool] = None,
+             spec: Optional[ElementSpec] = None) -> DynConfig:
+    """A :class:`DynConfig` defaulting every field to ``cfg``'s value.
+
+    ``spec`` selects a member of ``cfg.members`` (a union config's spec
+    set) and fills the spec-derived fields with that member's
+    :class:`SpecValues`; without it the lane runs the *primary*
+    (first) member -- for a plain single-spec config that is the
+    config's own spec, and for a union config it keeps dyn-less runs
+    meaningful instead of mixing cross-member maxima into a spec no
+    device has.
+
+    Overrides are validated eagerly: ``zone_pages`` / ``n_zones`` /
+    ``max_active`` beyond the padded static config would index past the
+    padded tables (silently wrong metrics), so out-of-range values
+    raise ``ValueError`` here instead.  Shrinking ``zone_pages`` on a
+    FIXED-kind lane is likewise rejected: FIXED elements *are* the
+    whole static zone, so there is no smaller element set for the
+    override to claim (see :class:`DynConfig`).
+    """
+    if spec is not None:
+        sv = cfg.member_values(spec)
+        kind = spec.kind
+    elif cfg.members:
+        spec0, sv = cfg.members[0]       # primary member
+        kind = spec0.kind
+    else:                                # hand-built config: own statics
+        sv = SpecValues(cfg.n_elements, cfg.per_group, cfg.take,
+                        cfg.zone_groups, cfg.slot_stride,
+                        cfg.pages_per_element)
+        kind = cfg.kind
+    if zone_pages is not None:
+        if not 0 < zone_pages <= cfg.zone_pages:
+            raise ValueError(
+                f"zone_pages override {zone_pages} out of range "
+                f"(static config holds {cfg.zone_pages} pages)")
+        if kind is ElementKind.FIXED and zone_pages < cfg.zone_pages:
+            raise ValueError(
+                "FIXED elements span the whole static zone; a "
+                f"zone_pages override ({zone_pages} < {cfg.zone_pages}) "
+                "cannot shrink a FIXED lane")
+    if n_zones is not None and not 0 < n_zones <= cfg.n_zones:
+        raise ValueError(
+            f"n_zones override {n_zones} out of range "
+            f"(static config holds {cfg.n_zones} zones)")
+    if max_active is not None and not 0 < max_active <= cfg.max_active:
+        raise ValueError(
+            f"max_active override {max_active} out of range "
+            f"(static config allows {cfg.max_active} active zones)")
     i32 = jnp.int32
     return DynConfig(
         zone_pages=jnp.asarray(
@@ -191,12 +307,22 @@ def make_dyn(cfg: EngineConfig, *, zone_pages: Optional[int] = None,
             cfg.n_zones if n_zones is None else n_zones, i32),
         wear_aware=jnp.asarray(
             cfg.wear_aware if wear_aware is None else wear_aware, bool),
+        n_elements=jnp.asarray(sv.n_elements, i32),
+        per_group=jnp.asarray(sv.per_group, i32),
+        take=jnp.asarray(sv.take, i32),
+        zone_groups=jnp.asarray(sv.zone_groups, i32),
+        slot_stride=jnp.asarray(sv.slot_stride, i32),
+        pages_per_element=jnp.asarray(sv.pages_per_element, i32),
     )
 
 
 def stack_dyn(dyns: Sequence[DynConfig]) -> DynConfig:
     """Stack per-lane :class:`DynConfig`\\ s along a leading batch axis
     (the shape ``run_programs`` consumes for a heterogeneous batch)."""
+    dyns = list(dyns)
+    if not dyns:
+        raise ValueError("stack_dyn needs at least one DynConfig "
+                         "(an empty fleet batch has no lanes to stack)")
     return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *dyns)
 
 
@@ -221,31 +347,96 @@ def make_config(flash: FlashGeometry, zone_geom: ZoneGeometry,
     layout = build_layout(flash, spec, zone_geom)
     elems = elements_per_zone(layout, zone_geom)
     zgroups = groups_per_zone(layout, zone_geom)
+    values = SpecValues(
+        n_elements=layout.n_elements,
+        per_group=layout.n_elements // layout.n_groups,
+        take=elems // zgroups,
+        zone_groups=zgroups,
+        slot_stride=_slot_stride(spec, zone_geom.parallelism),
+        pages_per_element=layout.pages_per_element,
+    )
     cfg = EngineConfig(
         kind=spec.kind,
         chunk=spec.chunk,
         wear_aware=(spec.kind is not ElementKind.FIXED
                     if wear_aware is None else wear_aware),
-        n_elements=layout.n_elements,
+        n_elements=values.n_elements,
         n_groups=layout.n_groups,
-        per_group=layout.n_elements // layout.n_groups,
+        per_group=values.per_group,
         luns_per_group=layout.luns_per_group,
-        take=elems // zgroups,
-        zone_groups=zgroups,
-        slot_stride=_slot_stride(spec, zone_geom.parallelism),
+        take=values.take,
+        zone_groups=values.zone_groups,
+        slot_stride=values.slot_stride,
         n_slots=zns.n_slots(spec, zone_geom.parallelism,
                             zone_geom.n_segments),
         parallelism=zone_geom.parallelism,
         n_segments=zone_geom.n_segments,
         pages_per_block=flash.pages_per_block,
         zone_pages=zone_geom.zone_pages(flash),
-        pages_per_element=layout.pages_per_element,
+        pages_per_element=values.pages_per_element,
         blocks_per_element=layout.blocks_per_element,
         n_zones=flash.n_blocks // zone_geom.blocks_per_zone,
         max_active=max_active,
         n_channels=flash.n_channels,
+        members=((spec, values),),
     )
     return cfg, layout
+
+
+def make_union_config(flash: FlashGeometry, zone_geom: ZoneGeometry,
+                      specs: Sequence[ElementSpec], *, max_active: int = 14,
+                      wear_aware: Optional[bool] = None
+                      ) -> Tuple[EngineConfig, dict]:
+    """One :class:`EngineConfig` hosting *any* of ``specs`` per lane.
+
+    Static shapes are padded to the max geometry across the spec set
+    (``n_groups`` x ``per_group`` element grid, ``n_slots`` / ``take``
+    / ``zone_groups`` maxima); the per-spec :class:`SpecValues` land in
+    ``cfg.members`` and are selected per lane with
+    ``make_dyn(cfg, spec=...)``.  A member's element ``(g, c)`` lives
+    at union id ``g * per_group_max + c``, so for specs sharing one
+    group width (BLOCK / VCHUNK / SUPERBLOCK all have
+    ``per_group = blocks_per_lun``) member ids are a dense prefix of
+    the union grid.  FIXED is rejected: its element *is* the static
+    zone, which leaves no spec axis to vary.
+
+    Returns ``(cfg, layouts)`` with one :class:`ElementLayout` per
+    member (host-side wear/block bookkeeping).
+    """
+    specs = tuple(specs)
+    if not specs:
+        raise ValueError("make_union_config needs at least one spec")
+    if len(set(specs)) != len(specs):
+        raise ValueError(f"duplicate specs in union: "
+                         f"{[s.name for s in specs]}")
+    if any(s.kind is ElementKind.FIXED for s in specs):
+        raise ValueError("FIXED elements span the whole static zone "
+                         "and cannot join a per-lane spec union")
+    built = [make_config(flash, zone_geom, s, max_active=max_active,
+                         wear_aware=wear_aware) for s in specs]
+    cfgs = [c for c, _ in built]
+    layouts = {s: lay for s, (_, lay) in zip(specs, built)}
+    n_groups = max(c.n_groups for c in cfgs)
+    per_group = max(c.per_group for c in cfgs)
+    cfg = dataclasses.replace(
+        cfgs[0],
+        # the padded element grid must stay rectangular for the
+        # (n_groups, per_group) allocator reshape, so the static
+        # element count is the full grid, not the largest member's
+        n_elements=n_groups * per_group,
+        n_groups=n_groups,
+        per_group=per_group,
+        luns_per_group=max(c.luns_per_group for c in cfgs),
+        take=max(c.take for c in cfgs),
+        zone_groups=max(c.zone_groups for c in cfgs),
+        slot_stride=max(c.slot_stride for c in cfgs),
+        n_slots=max(c.n_slots for c in cfgs),
+        pages_per_element=max(c.pages_per_element for c in cfgs),
+        blocks_per_element=max(c.blocks_per_element for c in cfgs),
+        members=tuple((s, c.member_values(s))
+                      for s, c in zip(specs, cfgs)),
+    )
+    return cfg, layouts
 
 
 def init_state(cfg: EngineConfig) -> DeviceState:
@@ -273,12 +464,23 @@ def init_state(cfg: EngineConfig) -> DeviceState:
 # ----------------------------------------------------------------------- #
 # pure selection helpers (bit-exact with allocator.py / device_legacy.py)
 # ----------------------------------------------------------------------- #
-def _rr_mask(cfg: EngineConfig, start: jax.Array) -> jax.Array:
-    idx = (start + jnp.arange(cfg.zone_groups, dtype=jnp.int32)) % cfg.n_groups
+def _rr_mask(cfg: EngineConfig, dyn: DynConfig, start: jax.Array
+             ) -> jax.Array:
+    """Round-robin eligibility window: ``dyn.zone_groups`` consecutive
+    groups (mod the lane's *effective* group count) starting at
+    ``start``.  Window positions past ``dyn.zone_groups`` scatter out
+    of bounds and are dropped, so a union lane with fewer groups than
+    the padded static ``cfg.zone_groups`` gets exactly its own
+    window."""
+    ng = dyn.n_elements // dyn.per_group      # effective group count
+    pos = jnp.arange(cfg.zone_groups, dtype=jnp.int32)
+    idx = jnp.where(pos < dyn.zone_groups, (start + pos) % ng,
+                    cfg.n_groups)
     return jnp.zeros(cfg.n_groups, bool).at[idx].set(True)
 
 
-def _take_lowest(cfg: EngineConfig, w2, a2, eligible, by_wear, take_eff):
+def _take_lowest(cfg: EngineConfig, dyn: DynConfig, w2, a2, eligible,
+                 by_wear, take_eff):
     """Per-eligible-group ``take`` lowest-(wear, col) available elements.
 
     One ``top_k`` over the unique composite key ``wear * per_group + col``
@@ -287,17 +489,18 @@ def _take_lowest(cfg: EngineConfig, w2, a2, eligible, by_wear, take_eff):
     without full sorts -- the scan's hot path.  ``by_wear`` may be a
     traced () bool (the :class:`DynConfig` allocator axis); false is the
     wear-oblivious first-fit (selection key = column alone).
-    ``take_eff`` (traced, ``<= cfg.take``) is how many of the selected
+    ``take_eff`` (traced, ``<= dyn.take``) is how many of the selected
     elements the zone will actually claim (fewer under an effective-
-    capacity override): feasibility only requires that many.
+    capacity override): feasibility only requires that many.  Columns
+    past ``dyn.per_group`` are union-grid padding, never free.
 
     Returns (cols (n_groups, take) ordered ascending by (wear, col),
     feasible).  Valid only where ``eligible``; overflow-safe while wear
     stays below ``2**30 / per_group`` (far beyond any simulated churn).
     """
     free = (a2 == AVAIL_FREE) | (a2 == AVAIL_INVALID)
-    free = free & eligible[:, None]
     col = jnp.arange(cfg.per_group, dtype=jnp.int32)[None, :]
+    free = free & eligible[:, None] & (col < dyn.per_group)
     composite = w2 * cfg.per_group + col
     key = jnp.where(free, jnp.where(by_wear, composite, col), _BIG)
     negv, cols = jax.lax.top_k(-key, cfg.take)
@@ -323,14 +526,21 @@ def _take_lowest(cfg: EngineConfig, w2, a2, eligible, by_wear, take_eff):
     return cols, feasible
 
 
-def _cheapest_groups(cfg: EngineConfig, w2, a2, take_eff) -> jax.Array:
+def _cheapest_groups(cfg: EngineConfig, dyn: DynConfig, w2, a2, take_eff
+                     ) -> jax.Array:
+    ng = dyn.n_elements // dyn.per_group
+    grow = jnp.arange(cfg.n_groups, dtype=jnp.int32)[:, None]
+    col = jnp.arange(cfg.per_group, dtype=jnp.int32)[None, :]
     ok = (a2 == AVAIL_FREE) | (a2 == AVAIL_INVALID)
+    ok = ok & (grow < ng) & (col < dyn.per_group)  # union-grid padding
     keyed = jnp.where(ok, w2.astype(jnp.float32), jnp.inf)
     part = -jax.lax.top_k(-keyed, cfg.take)[0]  # take smallest per row
     rank = jnp.arange(cfg.take, dtype=jnp.int32)[None, :]
     cost = jnp.where(rank < take_eff, part, 0.0).sum(axis=1)
     order = jnp.argsort(cost, stable=True)[: cfg.zone_groups]
-    return jnp.zeros(cfg.n_groups, bool).at[order].set(True)
+    # cheapest dyn.zone_groups groups only (padded window tail unused)
+    picked = jnp.arange(cfg.zone_groups, dtype=jnp.int32) < dyn.zone_groups
+    return jnp.zeros(cfg.n_groups, bool).at[order].set(picked)
 
 
 def _where_state(pred, new: DeviceState, old: DeviceState) -> DeviceState:
@@ -374,19 +584,21 @@ def _alloc(cfg: EngineConfig, dyn: DynConfig, state: DeviceState,
         # the one a device built with the smaller geometry would pick
         # (slot layouts are uniform across groups for whole-segment
         # capacities, so the per-group claim count is a single scalar)
-        n_slots_eff = dyn.zone_pages // cfg.pages_per_element
-        take_eff = jnp.clip(n_slots_eff // max(1, cfg.slot_stride),
-                            1, cfg.take).astype(jnp.int32)
-        elig1 = _rr_mask(cfg, state.rr_next)
-        cols1, f1 = _take_lowest(cfg, w2, a2, elig1, dyn.wear_aware,
-                                 take_eff)
+        n_slots_eff = dyn.zone_pages // dyn.pages_per_element
+        take_eff = jnp.clip(
+            n_slots_eff // jnp.maximum(dyn.slot_stride, 1),
+            1, dyn.take).astype(jnp.int32)
+        elig1 = _rr_mask(cfg, dyn, state.rr_next)
+        cols1, f1 = _take_lowest(cfg, dyn, w2, a2, elig1,
+                                 dyn.wear_aware, take_eff)
 
         # round-robin window exhausted: cheapest feasible groups instead
         # (the legacy fallback always uses the wear-aware selection);
         # lazily computed -- the common path pays for one top_k only
         def fallback(_):
-            elig2 = _cheapest_groups(cfg, w2, a2, take_eff)
-            cols2, f2 = _take_lowest(cfg, w2, a2, elig2, True, take_eff)
+            elig2 = _cheapest_groups(cfg, dyn, w2, a2, take_eff)
+            cols2, f2 = _take_lowest(cfg, dyn, w2, a2, elig2, True,
+                                     take_eff)
             return cols2, f2, elig2
 
         cols, f2, elig = jax.lax.cond(
@@ -399,16 +611,26 @@ def _alloc(cfg: EngineConfig, dyn: DynConfig, state: DeviceState,
         eids = (win[:, None] * pg + cols[win]).astype(jnp.int32)
         ranks = jnp.arange(cfg.take, dtype=jnp.int32)[None, :]
         cpos = jnp.arange(cfg.zone_groups, dtype=jnp.int32)[:, None]
-        slots = (ranks * cfg.slot_stride + cpos).reshape(-1)
-        claimed = slots < n_slots_eff
-        elems_row = jnp.zeros(cfg.n_slots, jnp.int32).at[slots].set(
-            jnp.where(claimed, eids.reshape(-1), -1))
-        lpg = cfg.luns_per_group
-        cols_row = (win[:, None] * lpg
-                    + jnp.arange(lpg, dtype=jnp.int32)[None, :]
-                    ).reshape(-1)[: cfg.parallelism]
+        # window positions past the lane's zone_groups are union
+        # padding: their slots divert to the scratch column and their
+        # elements to the scratch element.  Ranks past the lane's take
+        # need no mask -- their slots land at or past the lane's slot
+        # count, which claiming (slot < n_slots_eff) already excludes.
+        valid = cpos < dyn.zone_groups
+        raw_slots = ranks * dyn.slot_stride + cpos
+        slots = jnp.where(valid, raw_slots, cfg.n_slots).reshape(-1)
+        claimed = (valid & (raw_slots < n_slots_eff)).reshape(-1)
+        elems_row = jnp.full(cfg.n_slots + 1, -1, jnp.int32).at[
+            slots].set(jnp.where(claimed, eids.reshape(-1),
+                                 -1))[: cfg.n_slots]
+        # zone column c -> LUN: window position c // luns_per_group
+        # owns the group band, c % luns_per_group walks its LUNs
+        lpg = cfg.parallelism // dyn.zone_groups
+        c = jnp.arange(cfg.parallelism, dtype=jnp.int32)
+        cols_row = win[c // lpg] * lpg + c % lpg
         # legacy advances the window even when the allocation then fails
-        rr_next = (state.rr_next + cfg.zone_groups) % cfg.n_groups
+        ng = dyn.n_elements // dyn.per_group
+        rr_next = (state.rr_next + dyn.zone_groups) % ng
 
     if cfg.kind is ElementKind.FIXED:
         flat = elems_row.reshape(-1)
@@ -420,7 +642,8 @@ def _alloc(cfg: EngineConfig, dyn: DynConfig, state: DeviceState,
     ok = limit_ok & feasible
     # deferred physical erase of invalid elements (paper §5 RESET)
     inv = claimed_flat & (state.elem_avail[flat] == AVAIL_INVALID)
-    erase_delta = inv.sum().astype(jnp.int32) * cfg.blocks_per_element
+    erase_delta = (inv.sum().astype(jnp.int32)
+                   * (dyn.pages_per_element // cfg.pages_per_block))
     new = state._replace(
         elem_wear=state.elem_wear.at[flat].add(inv.astype(jnp.int32)),
         elem_avail=state.elem_avail.at[flat].set(AVAIL_ALLOCATED),
@@ -443,9 +666,26 @@ def _alloc(cfg: EngineConfig, dyn: DynConfig, state: DeviceState,
     return state, ok
 
 
-def _written_per_slot(cfg: EngineConfig, wp: jax.Array) -> jax.Array:
-    return zns.element_pages_jnp(wp, cfg.spec, cfg.parallelism,
-                                 cfg.n_segments, cfg.pages_per_block)
+def _written_per_slot(cfg: EngineConfig, dyn: DynConfig, wp: jax.Array
+                      ) -> jax.Array:
+    """Pages written per element slot at zone pointer ``wp``, computed
+    from the lane's *dynamic* spec values: every (segment, column)
+    erase-block cell scatter-adds its page count into the slot
+
+        (segment // seg_span) * slot_stride + column // luns_per_group
+
+    which reproduces :func:`repro.core.zns.element_pages_jnp` for every
+    element kind (slot-map property-tested in
+    ``tests/test_union_spec.py``) while keeping the spec a value, not a
+    shape."""
+    blk = zns.pages_per_block_jnp(wp, cfg.parallelism, cfg.n_segments,
+                                  cfg.pages_per_block)
+    lpg = cfg.parallelism // dyn.zone_groups       # LUN columns / element
+    seg_span = dyn.pages_per_element // (lpg * cfg.pages_per_block)
+    slot = zns.slot_map_jnp(dyn.slot_stride, lpg, seg_span,
+                            cfg.parallelism, cfg.n_segments)
+    return jnp.zeros(cfg.n_slots, jnp.int32).at[slot.reshape(-1)].add(
+        blk.reshape(-1))
 
 
 def _write(cfg: EngineConfig, dyn: DynConfig, state: DeviceState,
@@ -460,7 +700,7 @@ def _write(cfg: EngineConfig, dyn: DynConfig, state: DeviceState,
     wp1 = wp0 + n_pages
     ok = (zst0 != ZONE_FULL) & aok & (wp1 <= dyn.zone_pages)
 
-    written = _written_per_slot(cfg, wp1).astype(jnp.int32)
+    written = _written_per_slot(cfg, dyn, wp1).astype(jnp.int32)
     elems = state.zone_elems[zone]
     valid = elems >= 0
     idx = jnp.where(valid, elems, cfg.n_elements)
@@ -482,17 +722,17 @@ def _write(cfg: EngineConfig, dyn: DynConfig, state: DeviceState,
     return _where_state(ok, new, state), ok
 
 
-def _finish(cfg: EngineConfig, state: DeviceState, zone
+def _finish(cfg: EngineConfig, dyn: DynConfig, state: DeviceState, zone
             ) -> Tuple[DeviceState, jax.Array]:
     zst0 = state.zone_state[zone]
     is_open = zst0 == ZONE_OPEN
     wp = state.zone_wp[zone]
-    written = _written_per_slot(cfg, wp).astype(jnp.int32)
+    written = _written_per_slot(cfg, dyn, wp).astype(jnp.int32)
     elems = state.zone_elems[zone]
     valid = elems >= 0
     untouched = valid & (written == 0) & is_open
     touched = valid & (written > 0) & is_open
-    cap = cfg.pages_per_element
+    cap = dyn.pages_per_element
     pad = jnp.sum(jnp.where(touched, cap - written, 0)).astype(jnp.int32)
     n = cfg.n_elements
     u_idx = jnp.where(untouched, elems, n)
@@ -565,7 +805,7 @@ def _apply_op_impl(cfg: EngineConfig, dyn: DynConfig, state: DeviceState,
         [nop,
          alloc_branch,
          lambda s: _write(cfg, dyn, s, zone, n_pages, host),
-         lambda s: _finish(cfg, s, zone),
+         lambda s: _finish(cfg, dyn, s, zone),
          lambda s: _reset(cfg, s, zone),
          nop],  # OP_READ: reads never change device state
         state)
@@ -654,26 +894,56 @@ class ZoneEngine:
     Holds the static :class:`EngineConfig` + :class:`ElementLayout` and
     wraps the module-level jitted transitions; state is always passed
     explicitly (the engine itself is stateless and shareable).
+
+    ``spec`` may be a single :class:`ElementSpec` or a *sequence* of
+    them: a sequence builds the padded union config
+    (:func:`make_union_config`), whose lanes each pick a member spec
+    through ``self.dyn(spec=...)`` -- one batched ``run_programs``
+    dispatch then mixes element specs per lane.  ``self.spec`` /
+    ``self.layout`` refer to the first (primary) member.
     """
 
     def __init__(self, flash: FlashGeometry, zone_geom: ZoneGeometry,
-                 spec: ElementSpec, *, max_active: int = 14,
+                 spec, *, max_active: int = 14,
                  wear_aware: Optional[bool] = None):
         self.flash = flash
         self.zone_geom = zone_geom
+        if isinstance(spec, ElementSpec):
+            self.cfg, self.layout = make_config(
+                flash, zone_geom, spec, max_active=max_active,
+                wear_aware=wear_aware)
+            self.layouts = {spec: self.layout}
+        else:
+            self.cfg, self.layouts = make_union_config(
+                flash, zone_geom, spec, max_active=max_active,
+                wear_aware=wear_aware)
+            self.layout = self.layouts[tuple(spec)[0]]
+            spec = tuple(spec)[0]
         self.spec = spec
-        self.cfg, self.layout = make_config(
-            flash, zone_geom, spec, max_active=max_active,
-            wear_aware=wear_aware)
 
     # -- state ---------------------------------------------------------- #
     def init_state(self) -> DeviceState:
         return init_state(self.cfg)
 
+    @property
+    def members(self) -> dict:
+        """Member spec -> :class:`SpecValues` (one entry for a plain
+        engine, one per union member otherwise)."""
+        return dict(self.cfg.members)
+
     def dyn(self, **overrides) -> DynConfig:
         """Per-call :class:`DynConfig` (``zone_pages`` / ``max_active`` /
-        ``n_zones`` / ``wear_aware`` keywords; others from ``cfg``)."""
+        ``n_zones`` / ``wear_aware`` / ``spec`` keywords; others from
+        ``cfg``)."""
         return make_dyn(self.cfg, **overrides)
+
+    def member_element_ids(self, spec: ElementSpec) -> np.ndarray:
+        """Dense element ids of ``spec`` -> their union-grid positions
+        (``(g, c) -> g * cfg.per_group + c``); the identity for a plain
+        single-spec engine."""
+        v = self.cfg.member_values(spec)
+        return union_grid_ids(v.n_elements, v.per_group,
+                              self.cfg.per_group)
 
     def apply(self, state: DeviceState, row,
               dyn: Optional[DynConfig] = None
@@ -715,14 +985,20 @@ class ZoneEngine:
             "n_active": float(int(state.n_active)),
         }
 
-    def elem_wear(self, state: DeviceState) -> np.ndarray:
-        return np.asarray(state.elem_wear[: self.cfg.n_elements],
-                          dtype=np.int64)
+    def elem_wear(self, state: DeviceState,
+                  spec: Optional[ElementSpec] = None) -> np.ndarray:
+        """Element wear in ``spec``'s dense id order (default: the
+        primary spec; union-grid padding elements are excluded)."""
+        ids = self.member_element_ids(spec or self.spec)
+        return np.asarray(state.elem_wear, dtype=np.int64)[ids]
 
-    def block_wear(self, state: DeviceState) -> np.ndarray:
+    def block_wear(self, state: DeviceState,
+                   spec: Optional[ElementSpec] = None) -> np.ndarray:
+        spec = spec or self.spec
+        layout = self.layouts[spec]
         wear = np.zeros(self.flash.n_blocks, dtype=np.int64)
-        wear[self.layout.blocks.reshape(-1)] = np.repeat(
-            self.elem_wear(state), self.layout.blocks_per_element)
+        wear[layout.blocks.reshape(-1)] = np.repeat(
+            self.elem_wear(state, spec), layout.blocks_per_element)
         return wear
 
     # -- IO stream reconstruction (host-side, post-scan) ---------------- #

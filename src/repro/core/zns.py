@@ -99,6 +99,35 @@ def element_pages_jnp(wp, spec: ElementSpec, parallelism: int,
     raise ValueError(spec.kind)
 
 
+def slot_map_jnp(slot_stride, luns_per_group, seg_span, parallelism: int,
+                 n_segments: int):
+    """(n_segments, P) element-slot id owning each (segment, column)
+    erase-block cell, from *value-level* spec parameters::
+
+        slot = (segment // seg_span) * slot_stride + column // luns_per_group
+
+    with ``seg_span = pages_per_element / (luns_per_group *
+    pages_per_block)`` (segments an element spans vertically).  The
+    three parameters may be traced scalars -- this is how the engine's
+    union path keeps the element spec a per-lane *value* -- and the map
+    reproduces the per-kind closed forms of :func:`element_pages` for
+    every element kind (property-tested):
+
+    =============  ===========  ==============  ========
+    kind           slot_stride  luns_per_group  seg_span
+    =============  ===========  ==============  ========
+    BLOCK          P            1               1
+    VCHUNK(s)      P // s       s               1
+    SUPERBLOCK     1            P               1
+    HCHUNK(s)      P            1               s
+    FIXED          1            P               n_segments
+    =============  ===========  ==============  ========
+    """
+    seg = jnp.arange(n_segments, dtype=jnp.int32)[:, None]
+    col = jnp.arange(parallelism, dtype=jnp.int32)[None, :]
+    return (seg // seg_span) * slot_stride + col // luns_per_group
+
+
 def n_slots(spec: ElementSpec, parallelism: int, n_segments: int) -> int:
     if spec.kind is ElementKind.BLOCK:
         return n_segments * parallelism

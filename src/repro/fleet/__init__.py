@@ -8,15 +8,15 @@ The fleet layer turns the repo from "replay the paper's sweeps" into
   (same stripe math as :class:`repro.array.ZNSArray`);
 * :mod:`repro.fleet.runner`  -- T tenants x N devices x K configs
   executed through ONE batched ``run_programs`` dispatch (heterogeneous
-  per-lane geometries/allocators via ``DynConfig``) plus op-granular
-  fleet timing;
+  per-lane geometries/allocators *and element specs* via ``DynConfig``
+  on a padded union config) plus op-granular fleet timing;
 * :mod:`repro.fleet.search`  -- the :class:`SearchSpace` candidate
   codec and the shared batched :class:`Evaluator` (one dispatch per
   candidate set, fidelity-truncated programs, budget ledger), plus
   grid/random enumeration over (tenant mix, zone geometry, chunk size,
-  parity, wear-awareness) scored on a weighted (DLWA, wear spread, p99
-  tenant latency) objective, with the Pareto front of non-dominated
-  configs;
+  parity, wear-awareness, element spec) scored on a weighted (DLWA,
+  wear spread, p99 tenant latency) objective, with the Pareto front of
+  non-dominated configs;
 * :mod:`repro.fleet.evolve`  -- the adaptive strategy: evolutionary
   proposals (mutation/crossover on the gene vector) with a
   successive-halving rung schedule, a persistent cross-generation

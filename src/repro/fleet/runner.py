@@ -23,6 +23,7 @@ import numpy as np
 
 from repro.core import engine as zengine
 from repro.core import timing
+from repro.core.elements import union_grid_mask
 from repro.core.engine import DeviceState, DynConfig, ZoneEngine
 from repro.fleet.tenants import TENANT_COL
 
@@ -49,15 +50,31 @@ class FleetResult:
     makespans: np.ndarray    # (L,) lane makespan (s)
     n_tenants: int           # real tenants (parity tag excluded)
     parity_tenant: int
+    elem_mask: Optional[np.ndarray] = None  # (L, n_elements) real elements
 
     @property
     def tenants(self) -> np.ndarray:
         return self.programs[:, :, TENANT_COL]
 
     def lane_wear(self, eng: ZoneEngine) -> np.ndarray:
-        """(L, n_elements) element wear (erase counts) per lane."""
+        """(L, n_elements) element wear (erase counts) per lane, over
+        the full padded static element axis (see ``elem_mask`` /
+        :meth:`pooled_wear` for the per-lane real subset)."""
         n = eng.cfg.n_elements
         return np.asarray(self.states.elem_wear[:, :n], dtype=np.int64)
+
+    def pooled_wear(self, eng: ZoneEngine, lanes: np.ndarray
+                    ) -> np.ndarray:
+        """1-D element wear pooled over ``lanes``, restricted to each
+        lane's *real* elements.  A union-config lane only populates its
+        member spec's cells of the padded element grid; ``elem_mask``
+        (derived from the dispatch's per-lane ``DynConfig``) excludes
+        the never-allocated padding so wear statistics match a device
+        built with the member spec outright."""
+        w = self.lane_wear(eng)[lanes]
+        if self.elem_mask is None:
+            return w.reshape(-1)
+        return w[self.elem_mask[lanes]]
 
     def tenant_pages(self, lanes: np.ndarray) -> Dict[int, int]:
         """Host pages per tenant summed over ``lanes`` (parity under
@@ -102,6 +119,15 @@ def run_fleet(eng: ZoneEngine, programs: np.ndarray, *,
         parity_tenant = n_tenants
     states, trace = eng.run_batch(eng.init_state(), programs, dyn)
 
+    elem_mask = None
+    if dyn is not None:
+        # each lane's real elements on the (possibly union-padded)
+        # static grid -- union lanes must exclude the padding cells
+        # from the wear rollups
+        elem_mask = union_grid_mask(eng.cfg.n_elements, eng.cfg.per_group,
+                                    np.asarray(dyn.n_elements),
+                                    np.asarray(dyn.per_group))
+
     wp_b = np.asarray(trace.wp_before)
     wp_a = np.asarray(trace.wp_after)
     dummy = np.asarray(trace.dummy_delta)
@@ -128,6 +154,7 @@ def run_fleet(eng: ZoneEngine, programs: np.ndarray, *,
         makespans=np.asarray(makespans),
         n_tenants=n_tenants,
         parity_tenant=parity_tenant,
+        elem_mask=elem_mask,
     )
 
 
@@ -149,7 +176,7 @@ def config_report(res: FleetResult, eng: ZoneEngine,
     par = int(res.host_delta[lanes][t == res.parity_tenant].sum())
     dummy = int(res.dummy_delta[lanes].sum())
     erases = int(res.erase_delta[lanes].sum())
-    wear = res.lane_wear(eng)[lanes].reshape(-1)
+    wear = res.pooled_wear(eng, lanes)
     mean_w = float(wear.mean()) if wear.size else 0.0
     p99 = res.tenant_p99_latency(lanes)
     return {

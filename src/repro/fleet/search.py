@@ -13,6 +13,12 @@ space.  This module makes that search executable: a
                          ``DynConfig`` capacity override on the padded
                          static config (heterogeneous lanes batch
                          together);
+* **element spec**    -- the zone storage-element granularity (paper
+                         §4, Table 1), realized as a per-lane
+                         ``DynConfig`` spec selection on a padded
+                         *union* config (``ZoneEngine`` built over a
+                         spec set) -- mixed-spec fleets run in ONE
+                         dispatch;
 * **chunk size**      -- the RAID stripe unit (pages per member turn);
 * **parity**          -- log-structured RAID-5 parity on/off;
 * **allocator**       -- wear-aware vs first-fit element selection;
@@ -47,7 +53,7 @@ import numpy as np
 
 from repro.core import engine as zengine
 from repro.core import workloads
-from repro.core.elements import ElementKind, ElementSpec
+from repro.core.elements import SUPERBLOCK, ElementKind, ElementSpec
 from repro.core.engine import ZoneEngine, stack_dyn
 from repro.core.geometry import FlashGeometry, ZoneGeometry
 from repro.fleet import runner
@@ -119,11 +125,13 @@ class FleetConfig:
     chunk_pages: int     # stripe unit (pages per member turn)
     parity: bool         # log-structured RAID-5 parity
     wear_aware: bool     # allocator policy
+    spec: ElementSpec = SUPERBLOCK  # zone storage-element granularity
 
     def describe(self) -> str:
         return (f"{self.mix}_s{self.n_segments}_c{self.chunk_pages}"
                 f"_{'p1' if self.parity else 'p0'}"
-                f"_{'wa' if self.wear_aware else 'ff'}")
+                f"_{'wa' if self.wear_aware else 'ff'}"
+                f"_{self.spec.name}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -142,11 +150,12 @@ class SearchSpace:
     chunks: Tuple[int, ...] = (1536, 3072)
     parities: Tuple[bool, ...] = (False, True)
     wear: Tuple[bool, ...] = (True, False)
+    specs: Tuple[ElementSpec, ...] = (SUPERBLOCK,)
 
     @property
     def axes(self) -> Tuple[Tuple, ...]:
         return (self.mixes, self.segments, self.chunks, self.parities,
-                self.wear)
+                self.wear, self.specs)
 
     def __len__(self) -> int:
         return math.prod(len(a) for a in self.axes)
@@ -160,13 +169,13 @@ class SearchSpace:
     def encode(self, fc: FleetConfig) -> Tuple[int, ...]:
         """Config -> per-axis index vector (raises if off the axes)."""
         vals = (fc.mix, fc.n_segments, fc.chunk_pages, fc.parity,
-                fc.wear_aware)
+                fc.wear_aware, fc.spec)
         return tuple(axis.index(v) for axis, v in zip(self.axes, vals))
 
     def grid(self) -> List[FleetConfig]:
         """Full cross product, axis-major order."""
-        return [FleetConfig(m, s, c, p, w)
-                for m, s, c, p, w in itertools.product(*self.axes)]
+        return [FleetConfig(*vals)
+                for vals in itertools.product(*self.axes)]
 
     def sample_genes(self, rng: pyrandom.Random) -> Tuple[int, ...]:
         """One uniform gene vector from a seeded ``random.Random``."""
@@ -177,10 +186,12 @@ def grid_space(*, mixes: Sequence[str] = tuple(MIXES),
                segments: Sequence[int] = (22, 11),
                chunks: Sequence[int] = (1536, 3072),
                parities: Sequence[bool] = (False, True),
-               wear: Sequence[bool] = (True, False)) -> List[FleetConfig]:
+               wear: Sequence[bool] = (True, False),
+               specs: Sequence[ElementSpec] = (SUPERBLOCK,)
+               ) -> List[FleetConfig]:
     """Full cross product (defaults: 2*2*2*2*2 = 32 configs on zn540)."""
     return SearchSpace(tuple(mixes), tuple(segments), tuple(chunks),
-                       tuple(parities), tuple(wear)).grid()
+                       tuple(parities), tuple(wear), tuple(specs)).grid()
 
 
 def random_space(seed: int, n: int, *,
@@ -188,12 +199,13 @@ def random_space(seed: int, n: int, *,
                  segments: Sequence[int] = (22, 11),
                  chunks: Sequence[int] = (1536, 3072),
                  parities: Sequence[bool] = (False, True),
-                 wear: Sequence[bool] = (True, False)
+                 wear: Sequence[bool] = (True, False),
+                 specs: Sequence[ElementSpec] = (SUPERBLOCK,)
                  ) -> List[FleetConfig]:
     """``n`` distinct configs sampled without replacement from the grid
     by a seeded PRNG -- deterministic under a fixed seed (tested)."""
     grid = grid_space(mixes=mixes, segments=segments, chunks=chunks,
-                      parities=parities, wear=wear)
+                      parities=parities, wear=wear, specs=specs)
     rng = np.random.default_rng(seed)
     idx = rng.choice(len(grid), size=min(n, len(grid)), replace=False)
     return [grid[i] for i in idx]
@@ -235,6 +247,12 @@ def build_fleet_batch(eng: ZoneEngine, configs: Sequence[FleetConfig],
         if fc.n_segments > eng.zone_geom.n_segments:
             raise ValueError(f"{fc}: n_segments exceeds the static "
                              f"geometry ({eng.zone_geom.n_segments})")
+        if fc.spec not in eng.members:
+            raise ValueError(
+                f"{fc}: spec {fc.spec.name} is not a member of the "
+                f"engine's config (members: "
+                f"{[s.name for s in eng.members]}); build the engine "
+                f"over the search space's spec set")
         member_zp = seg_pages * fc.n_segments
         n_data = n_devices - (1 if fc.parity else 0)
         cap = n_data * member_zp
@@ -248,7 +266,7 @@ def build_fleet_batch(eng: ZoneEngine, configs: Sequence[FleetConfig],
             merged, n_devices=n_devices, chunk_pages=fc.chunk_pages,
             parity=fc.parity, member_zone_pages=member_zp,
             parity_tenant=N_TENANTS)
-        dyns += [eng.dyn(zone_pages=member_zp,
+        dyns += [eng.dyn(spec=fc.spec, zone_pages=member_zp,
                          wear_aware=fc.wear_aware)] * n_devices
     q = max(1, pad_quantum)
     n_ops = -(-max((len(p) for p in lane_programs), default=0) // q) * q
@@ -299,7 +317,12 @@ class Evaluator:
                  fidelity: float = 1.0) -> List[Dict]:
         """Score ``configs`` in ONE batched dispatch; one metrics row
         per config (see :func:`repro.fleet.runner.config_report`), each
-        stamped with ``fidelity``."""
+        stamped with ``fidelity``.  An empty candidate set returns
+        ``[]`` without dispatching anything or touching the budget
+        ledger (an empty dispatch used to count, skewing the halving
+        decisions adaptive strategies read off ``n_dispatches``)."""
+        if not configs:
+            return []
         programs, dyn, _ = build_fleet_batch(
             self.eng, configs, n_devices=self.n_devices,
             fidelity=fidelity, pad_quantum=self.pad_quantum)
@@ -320,6 +343,7 @@ class Evaluator:
                 "chunk_pages": fc.chunk_pages,
                 "parity": float(fc.parity),
                 "wear_aware": float(fc.wear_aware),
+                "spec": fc.spec.name,
                 "n_devices": float(self.n_devices),
                 "fidelity": float(fidelity),
             }
@@ -402,9 +426,12 @@ def run_configs_legacy(flash: FlashGeometry, spec: ElementSpec,
     """Evaluate each config the pre-fleet way: replay its merged logical
     program through a real :class:`repro.array.ZNSArray` over per-op
     ``LegacyZNSDevice`` members.  Each config gets devices built with
-    its *actual* (non-padded) zone geometry, so this doubles as a
-    semantic cross-check: array DLWA must match the batched engine path
-    exactly (tested, and asserted by ``tools/bench.py``).
+    its *actual* (non-padded) zone geometry **and element spec**
+    (``fc.spec``; the ``spec`` argument is only the engine's primary
+    and is superseded per config), so this doubles as a semantic
+    cross-check: array DLWA must match the batched engine path exactly
+    (tested, and asserted by ``tools/bench.py``) -- including
+    mixed-spec batches through a union config.
 
     With ``fleet_timing`` the replay also collects the page-granular IO
     traces and runs :func:`repro.core.timing.run_fleet_trace` per
@@ -419,7 +446,7 @@ def run_configs_legacy(flash: FlashGeometry, spec: ElementSpec,
     for fc, merged in zip(configs, merged_programs):
         geom = ZoneGeometry(parallelism=parallelism,
                             n_segments=fc.n_segments)
-        devices = [LegacyZNSDevice(flash, geom, spec,
+        devices = [LegacyZNSDevice(flash, geom, fc.spec,
                                    max_active=max_active,
                                    wear_aware=fc.wear_aware)
                    for _ in range(n_devices)]
@@ -458,7 +485,9 @@ def fleet_vs_legacy_speedup(*, n_devices: int = 4,
                             repeats: int = 3,
                             flash: Optional[FlashGeometry] = None,
                             zone_geom: Optional[ZoneGeometry] = None,
-                            max_active: int = 14) -> Dict[str, float]:
+                            max_active: int = 14,
+                            specs: Optional[Sequence[ElementSpec]] = None
+                            ) -> Dict[str, float]:
     """Time the batched fleet sweep against the per-op legacy pipeline.
 
     Both paths evaluate the *same* configs on the *same* logical
@@ -477,21 +506,27 @@ def fleet_vs_legacy_speedup(*, n_devices: int = 4,
     is asserted identical between the paths before anything is timed.
     Also reports the replay-only legacy time (``legacy_replay_s``, no
     trace/timing) so the artifact separates state-machine cost from the
-    page-granular timing cost the legacy path is stuck with.  Returns
+    page-granular timing cost the legacy path is stuck with.  With
+    ``specs`` (a spec set) the engine is the padded *union* config and
+    the configs may mix element specs per lane -- the legacy path then
+    builds each config's members with its actual spec, making the DLWA
+    assert an exactness oracle for the mixed-spec dispatch.  Returns
     the numbers ``tools/bench.py`` archives in ``BENCH_fleet.json``.
     """
     import time
 
-    from repro.core.elements import SUPERBLOCK
     from repro.core.geometry import zn540
 
     if (flash is None) != (zone_geom is None):
         raise ValueError("flash and zone_geom must be given together")
     if flash is None:
         flash, zone_geom = zn540()
-    eng = ZoneEngine(flash, zone_geom, SUPERBLOCK, max_active=max_active)
+    specs = tuple(specs) if specs else (SUPERBLOCK,)
+    eng = ZoneEngine(flash, zone_geom,
+                     specs if len(specs) > 1 else specs[0],
+                     max_active=max_active)
     if configs is None:
-        configs = grid_space()
+        configs = grid_space(specs=specs)
     programs, dyn, merged = build_fleet_batch(eng, configs,
                                               n_devices=n_devices)
     n_ops = int((programs[:, :, 0] != zengine.OP_NOP).sum())
@@ -501,7 +536,7 @@ def fleet_vs_legacy_speedup(*, n_devices: int = 4,
 
     def legacy_pass(fleet_timing=True):
         return run_configs_legacy(
-            flash, SUPERBLOCK, configs, merged,
+            flash, specs[0], configs, merged,
             parallelism=zone_geom.parallelism, n_devices=n_devices,
             max_active=max_active, fleet_timing=fleet_timing)
 

@@ -279,6 +279,56 @@ def test_vmapped_sweep_equals_single_scans():
 
 
 # --------------------------------------------------------------------- #
+# DynConfig override validation (regressions: silent out-of-range
+# overrides indexed past the padded static tables, silent FIXED shrink
+# corrupted metrics)
+# --------------------------------------------------------------------- #
+def test_make_dyn_rejects_out_of_range_overrides():
+    """zone_pages / n_zones / max_active beyond the padded static
+    EngineConfig used to be accepted silently and index past the padded
+    tables (wrong metrics, no error); they must raise eagerly, naming
+    the offending field."""
+    flash = tiny_flash()
+    eng = E.ZoneEngine(flash, ZoneGeometry(4, 2), SUPERBLOCK,
+                       max_active=3)
+    cfg = eng.cfg
+    for field, bad in [("zone_pages", cfg.zone_pages + 1),
+                       ("zone_pages", 0),
+                       ("n_zones", cfg.n_zones + 1),
+                       ("n_zones", 0),
+                       ("max_active", cfg.max_active + 1),
+                       ("max_active", 0)]:
+        with pytest.raises(ValueError, match=field):
+            E.make_dyn(cfg, **{field: bad})
+        with pytest.raises(ValueError, match=field):
+            eng.dyn(**{field: bad})
+    # in-range values (the documented override surface) still pass
+    d = eng.dyn(zone_pages=cfg.zone_pages // 2, n_zones=1, max_active=1)
+    assert int(d.zone_pages) == cfg.zone_pages // 2
+
+
+def test_make_dyn_rejects_fixed_capacity_shrink():
+    """Shrinking zone_pages on a FIXED-kind lane is documented illegal
+    (the element *is* the whole static zone) and was guarded only in
+    ``build_fleet_batch``; direct ``make_dyn`` / ``run_batch`` callers
+    silently corrupted metrics.  Both construction paths must raise."""
+    flash = tiny_flash()
+    eng = E.ZoneEngine(flash, ZoneGeometry(4, 2), FIXED, max_active=3)
+    half = eng.cfg.zone_pages // 2
+    with pytest.raises(ValueError, match="FIXED"):
+        E.make_dyn(eng.cfg, zone_pages=half)
+    with pytest.raises(ValueError, match="FIXED"):
+        eng.dyn(zone_pages=half)   # the run/run_batch dyn entry point
+    # full capacity stays legal on FIXED lanes
+    assert int(eng.dyn(zone_pages=eng.cfg.zone_pages).zone_pages) \
+        == eng.cfg.zone_pages
+    # non-FIXED kinds keep the established shrink semantics
+    blk = E.ZoneEngine(flash, ZoneGeometry(4, 2), BLOCK, max_active=3)
+    assert int(blk.dyn(zone_pages=blk.cfg.zone_pages // 2).zone_pages) \
+        == blk.cfg.zone_pages // 2
+
+
+# --------------------------------------------------------------------- #
 # shim-specific invariants
 # --------------------------------------------------------------------- #
 def test_warmup_alloc_does_not_mutate_state():

@@ -113,6 +113,22 @@ def test_archive_is_nondominated(result):
             assert not dominates, (a["config"], b["config"])
 
 
+def test_empty_batch_does_not_skew_ledger(eng):
+    """Regressions: ``stack_dyn([])`` died inside ``tree_map`` with an
+    opaque error, and ``Evaluator.evaluate([])`` dispatched an empty
+    batch while still counting a dispatch -- skewing the budget ledger
+    evolve's halving decisions read."""
+    with pytest.raises(ValueError, match="at least one DynConfig"):
+        E.stack_dyn([])
+    ev = Evaluator(eng, n_devices=4)
+    assert ev.evaluate([]) == []
+    assert ev.evaluate([], fidelity=0.25) == []
+    assert (ev.n_dispatches, ev.n_evals, ev.lane_ops) == (0, 0.0, 0)
+    # a real batch afterwards counts exactly once
+    ev.evaluate(SPACE.grid()[:2])
+    assert (ev.n_dispatches, ev.n_evals) == (1, 2.0)
+
+
 def test_evaluator_ledger_and_fidelity(eng):
     ev = Evaluator(eng, n_devices=4)
     configs = SPACE.grid()[:4]

@@ -16,6 +16,11 @@ Two tracked trajectories, each written as a JSON artifact:
   reach the best objective of a 32-config random search
   (``repro.fleet.evolve.evolve_vs_random``; gate: target reached with
   <= half the random baseline's full-fidelity-equivalent evals).
+  Since PR 5 a ``mixed_spec`` section times a SUPERBLOCK+BLOCK+VCHUNK2
+  sweep through ONE union-config dispatch (per-lane ``DynConfig`` spec
+  selection) vs the per-config legacy pipeline, whose members are
+  built with each config's actual element spec -- the mixed-spec DLWA
+  agreement is asserted before timing.
 
 Both speedup comparisons assert metric agreement between the paths
 before timing anything.  Usage::
@@ -99,7 +104,7 @@ def bench_engine(args) -> int:
 
 
 def bench_fleet(args) -> int:
-    from repro.core.elements import SUPERBLOCK
+    from repro.core.elements import BLOCK, SUPERBLOCK, vchunk
     from repro.core.engine import ZoneEngine
     from repro.core.geometry import zn540
     from repro.fleet import SearchSpace, evolve_vs_random
@@ -112,6 +117,19 @@ def bench_fleet(args) -> int:
         space = SearchSpace(chunks=(1536,), parities=(False, True))
     rep = fleet_vs_legacy_speedup(configs=configs, repeats=args.repeats)
 
+    # mixed element specs in ONE union-config dispatch vs the per-spec
+    # legacy pipeline (members built with each config's actual spec;
+    # DLWA agreement asserted inside before timing)
+    mixed_specs = (SUPERBLOCK, BLOCK, vchunk(2))
+    mixed_configs = grid_space(
+        segments=(22,) if args.quick else (22, 11),
+        chunks=(1536,), parities=(False,), wear=(True,),
+        specs=mixed_specs)
+    mixed = fleet_vs_legacy_speedup(configs=mixed_configs,
+                                    specs=mixed_specs,
+                                    repeats=args.repeats)
+    mixed["n_specs"] = float(len(mixed_specs))
+
     # adaptive search: dispatched budget to reach the random-32 target
     flash, zone = zn540()
     eng = ZoneEngine(flash, zone, SUPERBLOCK, max_active=14)
@@ -120,6 +138,7 @@ def bench_fleet(args) -> int:
 
     artifact = {
         "fleet_sweep": rep,
+        "mixed_spec": mixed,
         "evolve": evo,
         "meta": _meta(repeats=args.repeats, quick=bool(args.quick)),
     }
@@ -129,6 +148,10 @@ def bench_fleet(args) -> int:
           f"legacy {rep['legacy_s']:.2f}s vs engine {rep['engine_s']:.2f}s "
           f"-> speedup {rep['speedup']:.1f}x "
           f"(replay-only {rep['replay_speedup']:.1f}x)")
+    print(f"mixed-spec: {mixed['n_configs']:.0f} configs over "
+          f"{len(mixed_specs)} element specs in one dispatch, "
+          f"legacy {mixed['legacy_s']:.2f}s vs engine "
+          f"{mixed['engine_s']:.2f}s -> speedup {mixed['speedup']:.1f}x")
     print(f"evolve: target {evo['random']['best_objective']:.4f} "
           f"({'reached' if evo['evolve']['reached_target'] else 'MISSED'}) "
           f"with {evo['evolve']['n_evals']:.1f} evals / "
@@ -152,7 +175,10 @@ def bench_fleet(args) -> int:
 
 
 def main() -> int:
-    ap = argparse.ArgumentParser(description=__doc__)
+    # allow_abbrev off: a mistyped/abbreviated flag (e.g. `--skip`)
+    # must exit non-zero instead of silently running everything under
+    # argparse's prefix guessing
+    ap = argparse.ArgumentParser(description=__doc__, allow_abbrev=False)
     ap.add_argument("--out", type=pathlib.Path,
                     default=_ROOT / "BENCH_zoneengine.json")
     ap.add_argument("--fleet-out", type=pathlib.Path,
@@ -163,6 +189,9 @@ def main() -> int:
     ap.add_argument("--skip-engine", action="store_true")
     ap.add_argument("--skip-fleet", action="store_true")
     args = ap.parse_args()
+    if args.skip_engine and args.skip_fleet:
+        ap.error("--skip-engine and --skip-fleet together leave "
+                 "nothing to benchmark")
 
     rc = 0
     if not args.skip_engine:
