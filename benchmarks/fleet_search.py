@@ -31,6 +31,14 @@ The front/archive is also written as JSON (``--out``, default
         [--random N] [--population K --generations G] [--target OBJ]
         [--specs superblock,block,vchunk2] [--out fleet_pareto.json]
 
+With ``--obs`` the run re-dispatches the Pareto-front configs (up to
+``--obs-configs``) through the flight recorder (:mod:`repro.obs`) and
+writes ``<prefix>_trace.json`` -- a Perfetto-loadable Chrome trace of
+the fleet (tenant classes as named tracks, zone ops as duration
+events) -- plus ``<prefix>_obs.json`` (telemetry timelines, metrics,
+dispatch profile, recompile table; render it with
+``tools/obs_report.py``).
+
 The batched-vs-legacy speedup and the evolve-vs-random
 dispatches-to-target comparison live in ``tools/bench.py`` (artifact
 ``BENCH_fleet.json``), not here.
@@ -76,6 +84,35 @@ def parse_spec(name: str) -> ElementSpec:
     raise argparse.ArgumentTypeError(
         f"unknown element spec {name!r} (want superblock, block, "
         f"vchunkN or hchunkN)")
+
+
+def emit_obs_artifacts(eng, configs, *, n_devices: int,
+                       out_prefix: str = "fleet", n_buckets: int = 32,
+                       meta: dict | None = None) -> dict:
+    """Re-dispatch ``configs`` through the flight recorder and write
+    the Perfetto trace + telemetry sidecar (``<out_prefix>_trace.json``
+    / ``<out_prefix>_obs.json``).  The trace is schema-validated before
+    returning; lanes are labeled ``<config>/dev<d>``.  Importable so
+    tests drive it directly (the --obs acceptance path)."""
+    from repro.fleet import N_TENANTS, build_fleet_batch, run_fleet
+    from repro.fleet.runner import assert_all_ok
+    from repro.obs import (ObsConfig, Profiler, RecompileCounter,
+                           emit_fleet_obs)
+
+    programs, dyn, _ = build_fleet_batch(eng, configs,
+                                         n_devices=n_devices)
+    obs = ObsConfig(n_buckets=n_buckets, n_tenants=N_TENANTS + 1)
+    prof = Profiler()
+    res = run_fleet(eng, programs, dyn=dyn, n_tenants=N_TENANTS,
+                    obs=obs, profiler=prof)
+    assert_all_ok(res)
+    labels = [f"{fc.describe()}/dev{d}"
+              for fc in configs for d in range(n_devices)]
+    return emit_fleet_obs(
+        res, eng, obs=obs, out_prefix=out_prefix, lane_labels=labels,
+        profiler=prof, recompiles=RecompileCounter.engine_default(),
+        meta={"n_configs": len(configs), "n_devices": n_devices,
+              **(meta or {})})
 
 
 def run_enumerative(args, eng, axes, n_devices, b: Bench) -> dict:
@@ -174,6 +211,14 @@ def main() -> None:
                          "lanes, one dispatch)")
     ap.add_argument("--out", type=str, default="fleet_pareto.json",
                     help="Pareto front JSON ('' to skip)")
+    ap.add_argument("--obs", action="store_true",
+                    help="flight-record the Pareto front: write a "
+                         "Perfetto trace + telemetry sidecar")
+    ap.add_argument("--obs-prefix", type=str, default="fleet",
+                    help="--obs artifact prefix (<prefix>_trace.json, "
+                         "<prefix>_obs.json)")
+    ap.add_argument("--obs-configs", type=int, default=8,
+                    help="--obs: at most this many front configs")
     ap.add_argument("--quick", action="store_true",
                     help="smaller axes (CI smoke): 8 configs, 3 devices")
     args = ap.parse_args()
@@ -210,6 +255,23 @@ def main() -> None:
             json.dumps(report, indent=2) + "\n")
         print(f"# wrote {args.out} ({len(report['front'])} Pareto "
               f"configs)", file=sys.stderr)
+
+    if args.obs:
+        from repro.fleet import FleetConfig  # noqa: F401  (front rows)
+        front_names = [r["config"] for r in report["front"]]
+        all_axes = grid_space(**axes)
+        by_name = {fc.describe(): fc for fc in all_axes}
+        obs_configs = [by_name[n] for n in front_names
+                       if n in by_name][: args.obs_configs]
+        if not obs_configs:        # e.g. an empty front: record best
+            obs_configs = all_axes[:1]
+        paths = emit_obs_artifacts(
+            eng, obs_configs, n_devices=n_devices,
+            out_prefix=args.obs_prefix,
+            meta={"strategy": args.strategy, "seed": args.seed,
+                  "specs": ",".join(s.name for s in specs)})
+        print(f"# wrote {paths['trace']} ({paths['n_events']} events) "
+              f"and {paths['obs']}", file=sys.stderr)
 
 
 if __name__ == "__main__":

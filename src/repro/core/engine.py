@@ -833,22 +833,54 @@ def apply_op(cfg: EngineConfig, state: DeviceState, row: jax.Array,
     return _apply_op_impl(cfg, dyn, state, row)
 
 
-@functools.partial(jax.jit, static_argnums=(0,))
+def _scan_program(cfg: EngineConfig, dyn: DynConfig, state: DeviceState,
+                  program: jax.Array, obs):
+    """The shared scan body of :func:`run_program` / :func:`run_programs`.
+
+    With ``obs`` (a static ``repro.obs.recorder.ObsConfig``) the scan
+    carry additionally threads a telemetry accumulator and the return
+    grows a third element.  The recorder only *reads* the device state,
+    so the ``DeviceState`` / ``OpTrace`` outputs are bit-identical with
+    and without it (property-tested in ``tests/test_obs.py``)."""
+    if obs is None:
+        return jax.lax.scan(
+            lambda s, r: _apply_op_impl(cfg, dyn, s, r), state, program)
+    # imported lazily: repro.obs depends on repro.core, not vice versa
+    from repro.obs import recorder
+
+    n_ops = int(program.shape[0])
+
+    def step(carry, row):
+        s, tel = carry
+        s2, trace = _apply_op_impl(cfg, dyn, s, row)
+        tel2 = recorder.telemetry_update(obs, tel, s, s2, trace, row,
+                                         max(n_ops, 1))
+        return (s2, tel2), trace
+
+    (state2, tel), trace = jax.lax.scan(
+        step, (state, recorder.telemetry_init(obs)), program)
+    return state2, trace, tel
+
+
+@functools.partial(jax.jit, static_argnums=(0,),
+                   static_argnames=("obs",))
 def run_program(cfg: EngineConfig, state: DeviceState, program: jax.Array,
-                dyn: Optional[DynConfig] = None
+                dyn: Optional[DynConfig] = None, *, obs=None
                 ) -> Tuple[DeviceState, OpTrace]:
     """Execute an ``(n_ops, >=4)`` int32 program in a single ``lax.scan``.
     Only the first four row columns are interpreted; extra columns (e.g.
-    the fleet layer's tenant tag) ride along untouched."""
+    the fleet layer's tenant tag) ride along untouched.  ``obs`` (a
+    static ``repro.obs.recorder.ObsConfig``) opts into in-scan
+    telemetry: the return becomes ``(state, trace, telemetry)``."""
     if dyn is None:
         dyn = make_dyn(cfg)
-    return jax.lax.scan(
-        lambda s, r: _apply_op_impl(cfg, dyn, s, r), state, program)
+    return _scan_program(cfg, dyn, state, program, obs)
 
 
-@functools.partial(jax.jit, static_argnums=(0,))
+@functools.partial(jax.jit, static_argnums=(0,),
+                   static_argnames=("obs",))
 def run_programs(cfg: EngineConfig, state: DeviceState, programs: jax.Array,
-                 dyn: Optional[DynConfig] = None
+                 dyn: Optional[DynConfig] = None, *, obs=None
                  ) -> Tuple[DeviceState, OpTrace]:
     """Batch :func:`run_program` over a leading program axis (shared
     initial state) -- a whole parameter sweep in one compiled dispatch.
@@ -857,7 +889,9 @@ def run_programs(cfg: EngineConfig, state: DeviceState, programs: jax.Array,
     :func:`stack_dyn`): lane ``k`` runs ``programs[k]`` under
     ``dyn[k]``, which is how a *heterogeneous* fleet (mixed effective
     zone geometries / allocator policies, padded to the largest static
-    shape) executes in one dispatch.
+    shape) executes in one dispatch.  ``obs`` opts into per-lane
+    telemetry stacks (``(n_programs, n_buckets, ...)`` leaves): the
+    return becomes ``(states, traces, telemetry)``.
 
     Uses ``lax.map`` rather than ``jax.vmap``: the transitions are
     scatter/gather-heavy and batching them materializes every branch of
@@ -865,12 +899,10 @@ def run_programs(cfg: EngineConfig, state: DeviceState, programs: jax.Array,
     on CPU than mapping the already-tight single-device scan."""
     if dyn is None:
         return jax.lax.map(
-            lambda p: jax.lax.scan(
-                lambda s, r: _apply_op_impl(cfg, make_dyn(cfg), s, r),
-                state, p), programs)
+            lambda p: _scan_program(cfg, make_dyn(cfg), state, p, obs),
+            programs)
     return jax.lax.map(
-        lambda pd: jax.lax.scan(
-            lambda s, r: _apply_op_impl(cfg, pd[1], s, r), state, pd[0]),
+        lambda pd: _scan_program(cfg, pd[1], state, pd[0], obs),
         (programs, dyn))
 
 
@@ -952,18 +984,22 @@ class ZoneEngine:
                         jnp.asarray(row, jnp.int32), dyn)
 
     def run(self, state: DeviceState, program: np.ndarray,
-            dyn: Optional[DynConfig] = None
+            dyn: Optional[DynConfig] = None, *, obs=None
             ) -> Tuple[DeviceState, OpTrace]:
+        """One scan; ``obs`` (an ``ObsConfig``) adds a telemetry third
+        return -- see :func:`run_program`."""
         return run_program(self.cfg, state,
-                           jnp.asarray(program, jnp.int32), dyn)
+                           jnp.asarray(program, jnp.int32), dyn, obs=obs)
 
     def run_batch(self, state: DeviceState, programs: np.ndarray,
-                  dyn: Optional[DynConfig] = None
+                  dyn: Optional[DynConfig] = None, *, obs=None
                   ) -> Tuple[DeviceState, OpTrace]:
         """Batched :meth:`run`; ``dyn`` with ``(n_programs,)`` leaves
-        (see :func:`stack_dyn`) makes the batch heterogeneous."""
+        (see :func:`stack_dyn`) makes the batch heterogeneous; ``obs``
+        adds per-lane telemetry stacks."""
         return run_programs(self.cfg, state,
-                            jnp.asarray(programs, jnp.int32), dyn)
+                            jnp.asarray(programs, jnp.int32), dyn,
+                            obs=obs)
 
     def warmup(self) -> None:
         """Compile every op branch on a scratch state (one switch jit)."""

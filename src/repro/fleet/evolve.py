@@ -239,13 +239,23 @@ def evolve(eng: ZoneEngine, *, space: Optional[SearchSpace] = None,
         gen_best = min(rows, key=ev.objective)
         if best_row is None or ev.objective(gen_best) < ev.objective(best_row):
             best_row = gen_best
-        history.append({
+        row = {
             "generation": gen,
             "rungs": rungs,
             "best_of_gen": ev.objective(gen_best),
             "best_so_far": ev.objective(best_row),
             **ev.ledger(),
-        })
+        }
+        if ev.profiler is not None:
+            # opt-in observability (repro.obs): compile-cache readings
+            # per generation -- flat after warmup proves the evaluator's
+            # pad_quantum kept the dispatch shapes stable.  Gated on the
+            # profiler because cache sizes are process-global (recording
+            # them unconditionally would break same-process seeded
+            # determinism of the history).
+            row["jit_cache"] = ev.jit_cache()
+            row["profile"] = ev.profiler.snapshot()
+        history.append(row)
         if target is not None and ev.objective(best_row) <= target:
             reached = True
             break

@@ -16,9 +16,11 @@ erase-block erasures, times are seconds.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Dict, List, Optional
 
+import jax
 import numpy as np
 
 from repro.core import engine as zengine
@@ -51,6 +53,9 @@ class FleetResult:
     n_tenants: int           # real tenants (parity tag excluded)
     parity_tenant: int
     elem_mask: Optional[np.ndarray] = None  # (L, n_elements) real elements
+    #: per-lane telemetry stack (repro.obs TelemetryState with (L, ...)
+    #: leaves) when the dispatch ran with obs=ObsConfig(...), else None
+    telemetry: Optional[object] = None
 
     @property
     def tenants(self) -> np.ndarray:
@@ -101,7 +106,8 @@ class FleetResult:
 
 def run_fleet(eng: ZoneEngine, programs: np.ndarray, *,
               dyn: Optional[DynConfig] = None, n_tenants: int = 1,
-              parity_tenant: Optional[int] = None) -> FleetResult:
+              parity_tenant: Optional[int] = None, obs=None,
+              profiler=None) -> FleetResult:
     """Execute ``(L, n_ops, 5)`` fleet lanes in one batched dispatch.
 
     ``dyn`` (optional) must hold ``(L,)`` leaves (``engine.stack_dyn``)
@@ -110,6 +116,13 @@ def run_fleet(eng: ZoneEngine, programs: np.ndarray, *,
     each executed op occupies its zone's LUN columns for
     ``ceil(pages / P) * (t_prog + t_xfer)`` seconds; deferred-erase
     latency is not modeled (it is tracked as ``erase_delta`` instead).
+
+    ``obs`` (a ``repro.obs.ObsConfig``) threads the in-scan telemetry
+    recorder through the dispatch; the result then carries per-lane
+    histogram stacks in ``telemetry``.  ``profiler`` (a
+    ``repro.obs.Profiler``) splits the call into ``fleet.engine`` /
+    ``fleet.timing`` / ``fleet.decode`` sections (outputs are blocked
+    on inside each section so the wall times are honest).
     """
     programs = np.asarray(programs, dtype=np.int32)
     if programs.ndim != 3 or programs.shape[-1] <= TENANT_COL:
@@ -117,7 +130,14 @@ def run_fleet(eng: ZoneEngine, programs: np.ndarray, *,
                          f"{programs.shape}")
     if parity_tenant is None:
         parity_tenant = n_tenants
-    states, trace = eng.run_batch(eng.init_state(), programs, dyn)
+    sec = (profiler.section if profiler is not None
+           else (lambda _name: contextlib.nullcontext()))
+    with sec("fleet.engine"):
+        out = eng.run_batch(eng.init_state(), programs, dyn, obs=obs)
+        states, trace = out[0], out[1]
+        telemetry = out[2] if obs is not None else None
+        if profiler is not None:
+            jax.block_until_ready(states)
 
     elem_mask = None
     if dyn is not None:
@@ -128,19 +148,32 @@ def run_fleet(eng: ZoneEngine, programs: np.ndarray, *,
                                     np.asarray(dyn.n_elements),
                                     np.asarray(dyn.per_group))
 
-    wp_b = np.asarray(trace.wp_before)
-    wp_a = np.asarray(trace.wp_after)
-    dummy = np.asarray(trace.dummy_delta)
-    op = programs[:, :, 0]
-    # pages the op physically programmed: write advance, plus FINISH
-    # padding (RESET rewinds wp without moving pages -> clip)
-    pages = np.maximum(wp_a - wp_b, 0) + np.where(
-        op == zengine.OP_FINISH, dummy, 0)
-    t_page = np.float32(eng.flash.t_prog + eng.flash.t_xfer)
-    completions, latencies, makespans = timing.simulate_fleet_ops(
-        np.asarray(trace.cols), pages.astype(np.int32),
-        programs[:, :, TENANT_COL], t_page,
-        eng.flash.n_luns, parity_tenant + 1)
+    with sec("fleet.timing"):
+        wp_b = np.asarray(trace.wp_before)
+        wp_a = np.asarray(trace.wp_after)
+        dummy = np.asarray(trace.dummy_delta)
+        op = programs[:, :, 0]
+        # pages the op physically programmed: write advance, plus FINISH
+        # padding (RESET rewinds wp without moving pages -> clip)
+        pages = np.maximum(wp_a - wp_b, 0) + np.where(
+            op == zengine.OP_FINISH, dummy, 0)
+        t_page = np.float32(eng.flash.t_prog + eng.flash.t_xfer)
+        completions, latencies, makespans = timing.simulate_fleet_ops(
+            np.asarray(trace.cols), pages.astype(np.int32),
+            programs[:, :, TENANT_COL], t_page,
+            eng.flash.n_luns, parity_tenant + 1)
+        if profiler is not None:
+            jax.block_until_ready(completions)
+    with sec("fleet.decode"):
+        return _decode_fleet(programs, states, trace, dummy, pages,
+                             completions, latencies, makespans,
+                             n_tenants, parity_tenant, elem_mask,
+                             telemetry)
+
+
+def _decode_fleet(programs, states, trace, dummy, pages, completions,
+                  latencies, makespans, n_tenants, parity_tenant,
+                  elem_mask, telemetry) -> FleetResult:
     return FleetResult(
         programs=programs,
         states=states,
@@ -155,6 +188,7 @@ def run_fleet(eng: ZoneEngine, programs: np.ndarray, *,
         n_tenants=n_tenants,
         parity_tenant=parity_tenant,
         elem_mask=elem_mask,
+        telemetry=telemetry,
     )
 
 

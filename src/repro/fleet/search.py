@@ -43,6 +43,7 @@ adaptive strategies minimize.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import itertools
 import math
@@ -52,7 +53,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core import engine as zengine
-from repro.core import workloads
+from repro.core import timing, workloads
 from repro.core.elements import SUPERBLOCK, ElementKind, ElementSpec
 from repro.core.engine import ZoneEngine, stack_dyn
 from repro.core.geometry import FlashGeometry, ZoneGeometry
@@ -299,19 +300,40 @@ class Evaluator:
     so repeated same-size candidate sets (evolve generations, halving
     rungs) hit the same compiled ``run_programs`` shape instead of
     recompiling per batch.
+
+    Observability (``repro.obs``): ``profiler`` threads per-section
+    counters (``evaluator.build`` / the ``fleet.*`` sections of
+    :func:`runner.run_fleet`) through every dispatch, and
+    ``recompiles`` watches the jit caches of the dispatch surface --
+    :meth:`jit_cache` readings staying flat across repeated
+    generations is the shape-stability property ``pad_quantum`` buys
+    (asserted in ``tests/test_obs.py``, recorded per generation by
+    ``repro.fleet.evolve`` when a profiler is attached, and archived
+    by ``tools/bench.py``).
     """
 
     def __init__(self, eng: ZoneEngine, *, n_devices: int = 4,
                  weights: Tuple[float, float, float] = (1.0, 1.0, 1.0),
-                 check_legal: bool = True, pad_quantum: int = 64):
+                 check_legal: bool = True, pad_quantum: int = 64,
+                 profiler=None):
+        from repro.obs.profile import RecompileCounter
         self.eng = eng
         self.n_devices = n_devices
         self.weights = tuple(weights)
         self.check_legal = check_legal
         self.pad_quantum = max(1, pad_quantum)
+        self.profiler = profiler
+        self.recompiles = RecompileCounter(
+            run_programs=zengine.run_programs,
+            simulate_fleet_ops=timing.simulate_fleet_ops)
         self.n_dispatches = 0
         self.n_evals = 0.0
         self.lane_ops = 0
+
+    def jit_cache(self) -> Dict[str, int]:
+        """Compile-cache entry counts of the dispatch surface (one
+        entry per abstract input signature ever compiled)."""
+        return self.recompiles.counts()
 
     def evaluate(self, configs: Sequence[FleetConfig], *,
                  fidelity: float = 1.0) -> List[Dict]:
@@ -323,11 +345,15 @@ class Evaluator:
         decisions adaptive strategies read off ``n_dispatches``)."""
         if not configs:
             return []
-        programs, dyn, _ = build_fleet_batch(
-            self.eng, configs, n_devices=self.n_devices,
-            fidelity=fidelity, pad_quantum=self.pad_quantum)
+        sec = (self.profiler.section if self.profiler is not None
+               else (lambda _name: contextlib.nullcontext()))
+        with sec("evaluator.build"):
+            programs, dyn, _ = build_fleet_batch(
+                self.eng, configs, n_devices=self.n_devices,
+                fidelity=fidelity, pad_quantum=self.pad_quantum)
         res = runner.run_fleet(self.eng, programs, dyn=dyn,
-                               n_tenants=N_TENANTS)
+                               n_tenants=N_TENANTS,
+                               profiler=self.profiler)
         if self.check_legal:
             runner.assert_all_ok(res)
         self.n_dispatches += 1

@@ -1,0 +1,178 @@
+"""Dispatch-level profiling: compile-phase split + recompile counting.
+
+Two independent instruments, both cheap enough to leave on:
+
+* :class:`CompileLog` -- a process-global accumulator of the
+  ``jax.monitoring`` compile-phase duration events
+  (jaxpr tracing, MLIR lowering, backend compilation).  A
+  :class:`Profiler` section snapshots it around a region of host code,
+  which splits the region's wall time into trace/lower/compile vs
+  everything else (execute + host work) *without* AOT plumbing -- a
+  warm dispatch shows zero compile seconds, a shape miss shows exactly
+  where the time went.
+* :class:`RecompileCounter` -- reads the jit caches of the functions it
+  watches (``fn._cache_size()``, keyed on abstract input signatures:
+  shapes/dtypes + static args).  A stable count across repeated
+  dispatches proves shape stability (the property
+  ``Evaluator.pad_quantum`` exists to buy); a growing count is the
+  recompile leak the ROADMAP's interference regression turned out to
+  be (see ``workloads.interference_sweep_engine``).
+
+Both degrade gracefully: if the monitoring hook or the private cache
+accessor disappears in a future jax, sections still report wall time
+and counters report ``-1`` rather than raising.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import copy
+import time
+from typing import Callable, Dict, Optional
+
+import jax
+
+#: jax.monitoring event -> the compile phase it times
+_EVENT_KEYS = {
+    "/jax/core/compile/jaxpr_trace_duration": "trace_s",
+    "/jax/core/compile/jaxpr_to_mlir_module_duration": "lower_s",
+    "/jax/core/compile/backend_compile_duration": "compile_s",
+}
+_PHASES = ("trace_s", "lower_s", "compile_s")
+
+
+class CompileLog:
+    """Accumulates jax compile-phase durations via ``jax.monitoring``.
+
+    One process-global instance (:data:`COMPILE_LOG`) is installed at
+    import; sections diff its :meth:`snapshot` around regions.  The
+    listener registration is append-only in jax, so exactly one install
+    per log instance."""
+
+    def __init__(self) -> None:
+        self.totals: Dict[str, float] = {k: 0.0 for k in _PHASES}
+        self.counts: Dict[str, int] = {k: 0 for k in _PHASES}
+        self.installed = False
+
+    def _listen(self, event: str, duration: float, **kw) -> None:
+        key = _EVENT_KEYS.get(event)
+        if key is not None:
+            self.totals[key] += float(duration)
+            self.counts[key] += 1
+
+    def install(self) -> "CompileLog":
+        if not self.installed:
+            try:
+                jax.monitoring.register_event_duration_secs_listener(
+                    self._listen)
+                self.installed = True
+            except Exception:       # monitoring API moved: stay inert
+                pass
+        return self
+
+    def snapshot(self) -> Dict[str, Dict]:
+        return {"totals": dict(self.totals), "counts": dict(self.counts)}
+
+
+#: the process-global compile log every Profiler defaults to
+COMPILE_LOG = CompileLog().install()
+
+
+class Profiler:
+    """Named per-section counters with a compile/execute wall split.
+
+    ``with prof.section("fleet.engine"): ...`` accumulates, per name:
+    ``calls``, ``wall_s``, the compile-phase seconds that elapsed
+    inside (``trace_s``/``lower_s``/``compile_s`` from the
+    :class:`CompileLog`), ``n_compiles`` (backend compilations
+    triggered), and ``execute_s`` (wall minus compile phases -- device
+    execution plus host-side work).  Sections nest; compile time then
+    shows up in every enclosing section, which is the truthful reading
+    (it *did* elapse there)."""
+
+    def __init__(self, compile_log: Optional[CompileLog] = None) -> None:
+        self.sections: Dict[str, Dict[str, float]] = {}
+        self._log = compile_log if compile_log is not None else COMPILE_LOG
+
+    @contextlib.contextmanager
+    def section(self, name: str):
+        before = self._log.snapshot()
+        t0 = time.perf_counter()
+        try:
+            yield self
+        finally:
+            wall = time.perf_counter() - t0
+            after = self._log.snapshot()
+            d = self.sections.setdefault(name, {
+                "calls": 0.0, "wall_s": 0.0, "trace_s": 0.0,
+                "lower_s": 0.0, "compile_s": 0.0, "execute_s": 0.0,
+                "n_compiles": 0.0})
+            d["calls"] += 1.0
+            d["wall_s"] += wall
+            in_compile = 0.0
+            for k in _PHASES:
+                dt = after["totals"][k] - before["totals"][k]
+                d[k] += dt
+                in_compile += dt
+            d["n_compiles"] += (after["counts"]["compile_s"]
+                                - before["counts"]["compile_s"])
+            d["execute_s"] += max(0.0, wall - in_compile)
+
+    def snapshot(self) -> Dict[str, Dict[str, float]]:
+        """JSON-ready copy of all section counters."""
+        return copy.deepcopy(self.sections)
+
+
+def jit_cache_size(fn) -> int:
+    """Entries in a jitted function's compile cache (one per abstract
+    input signature seen), or -1 if the accessor is unavailable."""
+    try:
+        return int(fn._cache_size())
+    except Exception:
+        return -1
+
+
+class RecompileCounter:
+    """Watches the jit caches of named functions.
+
+    ``RecompileCounter(run_programs=engine.run_programs).counts()``
+    returns ``{name: cache entries}``; :meth:`delta` diffs two readings
+    (positive = that many new abstract signatures were compiled in
+    between).  Counts are process-global per function, so *stability*
+    across repeated calls, not the absolute value, is the signal."""
+
+    def __init__(self, **fns: Callable) -> None:
+        if not fns:
+            raise ValueError("name at least one function to watch")
+        self._fns = dict(fns)
+
+    @classmethod
+    def engine_default(cls) -> "RecompileCounter":
+        """The engine + fleet-timing dispatch surface."""
+        from repro.core import engine, timing
+        return cls(apply_op=engine.apply_op,
+                   run_program=engine.run_program,
+                   run_programs=engine.run_programs,
+                   simulate_fleet_ops=timing.simulate_fleet_ops)
+
+    def counts(self) -> Dict[str, int]:
+        return {n: jit_cache_size(f) for n, f in self._fns.items()}
+
+    def delta(self, before: Dict[str, int]) -> Dict[str, int]:
+        return {n: c - before.get(n, 0)
+                for n, c in self.counts().items()}
+
+
+def profile_dispatch(fn: Callable, *args,
+                     profiler: Optional[Profiler] = None,
+                     name: Optional[str] = None, **kwargs):
+    """Call ``fn`` under a profiler section, blocking on its outputs so
+    the section's wall time covers device execution.  Returns
+    ``(result, section counters)``; pass ``profiler`` to accumulate
+    into an existing one."""
+    prof = profiler if profiler is not None else Profiler()
+    label = name or getattr(fn, "__name__", "dispatch")
+    with prof.section(label):
+        out = fn(*args, **kwargs)
+        jax.block_until_ready(out)
+    return out, prof.sections[label]

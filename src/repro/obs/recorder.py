@@ -1,0 +1,270 @@
+"""Pure-JAX telemetry accumulator carried through the op-program scan.
+
+The engine's ``run_program(s)`` already emits a per-op :class:`OpTrace`;
+what it cannot answer cheaply is "*when* did the superfluous writes /
+wear / occupancy happen" for long programs without hauling the whole
+trace to the host and re-aggregating.  :class:`TelemetryState` is a
+fixed-size pytree of time-bucketed histograms updated inside the scan:
+op ``i`` of an ``n_ops``-row program lands in bucket
+``i * n_buckets // n_ops``, so the telemetry shape is independent of
+program length and rides the batch axis of ``run_programs`` for free
+(one ``(L, n_buckets, ...)`` stack per fleet dispatch).
+
+Opt-in and effect-free: ``run_program(s)`` take an optional static
+:class:`ObsConfig`; without it nothing changes, with it the scan carry
+grows the telemetry pytree and the return gains a third element.  The
+recorder only *reads* the device state -- telemetry-on and
+telemetry-off runs produce bit-identical ``DeviceState`` / ``OpTrace``
+(integer state machine, property-tested in ``tests/test_obs.py``).
+
+Decoding is host-side and pandas-free: plain dicts of Python lists
+(JSON-ready), per lane (:func:`lane_timeline`), per fleet lane stack
+(:func:`fleet_timelines`), per tenant (:func:`tenant_timelines`), per
+zone (:func:`zone_timelines`, rebuilt from the materialized
+``OpTrace`` because per-zone in-scan histograms would scale with
+``n_zones``), and pooled per device (:func:`device_rollup`).
+
+Units: page counters count flash pages; ``wear_max`` counts erase-block
+erasures; buckets index program progress (op order), not wall time --
+the op program *is* the device's request clock.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+#: column a width-5 fleet op row stores its tenant tag in (kept in sync
+#: with repro.fleet.tenants.TENANT_COL; obs depends only on repro.core)
+_TENANT_COL = 4
+
+#: opcodes (mirrors repro.core.engine to avoid an import cycle with the
+#: engine's lazy recorder import)
+_OP_NOP, _OP_FINISH = 0, 3
+
+
+@dataclasses.dataclass(frozen=True)
+class ObsConfig:
+    """Static (hashable) recorder configuration.
+
+    ``n_buckets`` fixes the telemetry resolution (histogram length);
+    ``n_tenants`` sizes the per-tenant axes -- pass the number of
+    tenant *classes* including the parity tag (``N_TENANTS + 1`` for a
+    fleet batch; tags outside ``[0, n_tenants)`` clip into the last
+    class).  Width-4 programs have no tenant column and bin everything
+    into class 0.
+    """
+
+    n_buckets: int = 32
+    n_tenants: int = 1
+
+    def __post_init__(self) -> None:
+        if self.n_buckets < 1 or self.n_tenants < 1:
+            raise ValueError(
+                f"n_buckets and n_tenants must be >= 1, got "
+                f"{self.n_buckets}, {self.n_tenants}")
+
+
+class TelemetryState(NamedTuple):
+    """Time-bucketed per-lane histograms (all int32, ``B = n_buckets``,
+    ``T = n_tenants``).  Sums unless marked gauge."""
+
+    step: jax.Array         # () op index within the program
+    host: jax.Array         # (B,) host pages written
+    dummy: jax.Array        # (B,) superfluous (FINISH-pad / dummy) pages
+    erases: jax.Array       # (B,) block erasures
+    allocs: jax.Array       # (B,) allocator invocations
+    ok_ops: jax.Array       # (B,) legal executed (non-NOP) ops
+    illegal_ops: jax.Array  # (B,) illegal (rejected) ops
+    active_max: jax.Array   # (B,) gauge: max open zones in the bucket
+    wear_max: jax.Array     # (B,) gauge: max wear among touched elements
+    tenant_host: jax.Array   # (B, T) host pages per tenant class
+    tenant_dummy: jax.Array  # (B, T) dummy pages per tenant class
+
+
+def telemetry_init(obs: ObsConfig) -> TelemetryState:
+    """Zeroed accumulator for one program scan."""
+    b, t = obs.n_buckets, obs.n_tenants
+    z = jnp.zeros(b, jnp.int32)
+    return TelemetryState(
+        step=jnp.zeros((), jnp.int32),
+        host=z, dummy=z, erases=z, allocs=z, ok_ops=z, illegal_ops=z,
+        active_max=z, wear_max=z,
+        tenant_host=jnp.zeros((b, t), jnp.int32),
+        tenant_dummy=jnp.zeros((b, t), jnp.int32),
+    )
+
+
+def telemetry_update(obs: ObsConfig, tel: TelemetryState,
+                     before, after, trace, row: jax.Array,
+                     n_ops: int) -> TelemetryState:
+    """Fold one op into the histograms (traced inside the scan body).
+
+    ``before`` / ``after`` are the :class:`DeviceState` around the op,
+    ``trace`` its :class:`OpTrace`, ``row`` the raw op row (tenant tag
+    read from column 4 when present).  NOP padding is excluded from the
+    op-legality counters but its (zero) page deltas are folded anyway.
+    """
+    b = jnp.minimum(tel.step * obs.n_buckets // n_ops, obs.n_buckets - 1)
+    real = row[0] != _OP_NOP
+    ok_i = (real & trace.ok).astype(jnp.int32)
+    bad_i = real.astype(jnp.int32) - ok_i
+    # max wear among the elements the op's zone maps after the op: a
+    # cheap O(n_slots) gather that tracks the wear frontier without an
+    # O(n_elements) reduction per op
+    elems = trace.elems
+    valid = elems >= 0
+    wear = after.elem_wear[jnp.where(valid, elems, 0)]
+    wear_touched = jnp.max(jnp.where(valid, wear, 0)).astype(jnp.int32)
+    if row.shape[0] > _TENANT_COL:
+        tenant = jnp.clip(row[_TENANT_COL], 0, obs.n_tenants - 1)
+    else:
+        tenant = jnp.zeros((), jnp.int32)
+    return TelemetryState(
+        step=tel.step + 1,
+        host=tel.host.at[b].add(trace.host_delta),
+        dummy=tel.dummy.at[b].add(trace.dummy_delta),
+        erases=tel.erases.at[b].add(trace.erase_delta),
+        allocs=tel.allocs.at[b].add(after.alloc_calls
+                                    - before.alloc_calls),
+        ok_ops=tel.ok_ops.at[b].add(ok_i),
+        illegal_ops=tel.illegal_ops.at[b].add(bad_i),
+        active_max=tel.active_max.at[b].max(after.n_active),
+        wear_max=tel.wear_max.at[b].max(wear_touched),
+        tenant_host=tel.tenant_host.at[b, tenant].add(trace.host_delta),
+        tenant_dummy=tel.tenant_dummy.at[b, tenant].add(
+            trace.dummy_delta),
+    )
+
+
+# --------------------------------------------------------------------- #
+# host-side decoding (plain dicts of lists, JSON-ready)
+# --------------------------------------------------------------------- #
+_SUM_KEYS = ("host", "dummy", "erases", "allocs", "ok_ops",
+             "illegal_ops")
+_GAUGE_KEYS = ("active_max", "wear_max")
+
+
+def _np(tel: TelemetryState) -> Dict[str, np.ndarray]:
+    return {k: np.asarray(getattr(tel, k))
+            for k in _SUM_KEYS + _GAUGE_KEYS
+            + ("tenant_host", "tenant_dummy")}
+
+
+def lane_timeline(obs: ObsConfig, tel: TelemetryState,
+                  lane: Optional[int] = None) -> Dict[str, list]:
+    """One lane's histograms as a timeline dict.
+
+    ``lane`` selects a row of a batched (``run_programs``) telemetry
+    stack; ``None`` decodes an unbatched (``run_program``) one.  Adds
+    ``dlwa``: the *cumulative* device-level write amplification up to
+    each bucket boundary -- (host + dummy) pages per host page, the
+    paper's DLWA as a function of program progress (1.0 before any host
+    page lands).
+    """
+    arrs = _np(tel)
+    if lane is not None:
+        arrs = {k: v[lane] for k, v in arrs.items()}
+    if arrs["host"].ndim != 1:
+        raise ValueError("batched telemetry needs an explicit lane "
+                         "(leaves have a leading lane axis)")
+    out: Dict[str, list] = {k: arrs[k].astype(np.int64).tolist()
+                            for k in _SUM_KEYS + _GAUGE_KEYS}
+    ch = np.cumsum(arrs["host"].astype(np.int64))
+    cd = np.cumsum(arrs["dummy"].astype(np.int64))
+    out["dlwa"] = [float((h + d) / h) if h else 1.0
+                   for h, d in zip(ch, cd)]
+    out["tenant_host"] = arrs["tenant_host"].astype(np.int64).tolist()
+    out["tenant_dummy"] = arrs["tenant_dummy"].astype(np.int64).tolist()
+    out["n_buckets"] = int(obs.n_buckets)
+    out["n_tenants"] = int(obs.n_tenants)
+    return out
+
+
+def fleet_timelines(obs: ObsConfig, tel: TelemetryState
+                    ) -> List[Dict[str, list]]:
+    """Per-lane timelines of a batched telemetry stack (lane order is
+    the dispatch's lane order: config-major, device-minor for a
+    ``build_fleet_batch`` batch)."""
+    n_lanes = int(np.asarray(tel.host).shape[0])
+    return [lane_timeline(obs, tel, lane) for lane in range(n_lanes)]
+
+
+def tenant_timelines(obs: ObsConfig, tel: TelemetryState
+                     ) -> Dict[int, Dict[str, list]]:
+    """Per-tenant-class host/dummy page timelines pooled over all lanes
+    of a batched telemetry stack (class ``n_tenants - 1`` also absorbs
+    clipped out-of-range tags, e.g. the parity tag when the recorder
+    was sized without it)."""
+    th = np.asarray(tel.tenant_host, dtype=np.int64)
+    td = np.asarray(tel.tenant_dummy, dtype=np.int64)
+    if th.ndim == 3:                      # (L, B, T) -> (B, T)
+        th, td = th.sum(axis=0), td.sum(axis=0)
+    out = {}
+    for t in range(obs.n_tenants):
+        out[t] = {"host": th[:, t].tolist(), "dummy": td[:, t].tolist()}
+    return out
+
+
+def device_rollup(timelines: List[Dict[str, list]]) -> Dict[str, list]:
+    """Pool per-lane timelines into one device/fleet-level timeline
+    (sums summed, gauges maxed, DLWA recomputed from the pooled
+    cumulative sums)."""
+    if not timelines:
+        return {}
+    n = len(timelines[0]["host"])
+    out: Dict[str, list] = {}
+    for k in _SUM_KEYS:
+        out[k] = [sum(tl[k][i] for tl in timelines) for i in range(n)]
+    for k in _GAUGE_KEYS:
+        out[k] = [max(tl[k][i] for tl in timelines) for i in range(n)]
+    ch = np.cumsum(out["host"])
+    cd = np.cumsum(out["dummy"])
+    out["dlwa"] = [float((h + d) / h) if h else 1.0
+                   for h, d in zip(ch, cd)]
+    out["n_buckets"] = n
+    return out
+
+
+def zone_timelines(program: np.ndarray, trace,
+                   n_buckets: int) -> Dict[int, Dict[str, list]]:
+    """Per-zone timelines rebuilt host-side from one lane's materialized
+    :class:`OpTrace` (per-zone in-scan histograms would cost
+    ``O(n_zones)`` arrays in the carry; the trace already holds the
+    per-op zone, so post-hoc binning is free).
+
+    Returns ``{zone: {host, dummy, erases, wp}}`` for every zone the
+    program touched; ``wp`` is a gauge (the zone's write pointer after
+    the bucket's last op on it, carried forward across empty buckets).
+    """
+    program = np.asarray(program)
+    n_ops = len(program)
+    zone = np.asarray(trace.zone)
+    host = np.asarray(trace.host_delta, dtype=np.int64)
+    dummy = np.asarray(trace.dummy_delta, dtype=np.int64)
+    erases = np.asarray(trace.erase_delta, dtype=np.int64)
+    wp = np.asarray(trace.wp_after, dtype=np.int64)
+    out: Dict[int, Dict[str, list]] = {}
+    for i in range(n_ops):
+        if program[i, 0] == _OP_NOP:
+            continue
+        z = int(zone[i])
+        b = min(i * n_buckets // n_ops, n_buckets - 1)
+        tl = out.setdefault(z, {
+            "host": [0] * n_buckets, "dummy": [0] * n_buckets,
+            "erases": [0] * n_buckets, "wp": [-1] * n_buckets})
+        tl["host"][b] += int(host[i])
+        tl["dummy"][b] += int(dummy[i])
+        tl["erases"][b] += int(erases[i])
+        tl["wp"][b] = int(wp[i])
+    for tl in out.values():               # carry wp across empty buckets
+        last = 0
+        for b in range(n_buckets):
+            if tl["wp"][b] < 0:
+                tl["wp"][b] = last
+            last = tl["wp"][b]
+    return out
