@@ -1,11 +1,18 @@
 """ZNS-RAID fleet benchmark: device count x chunk x parity x allocator.
 
-Two modes, same ``name,us_per_call,derived`` CSV schema as
-``benchmarks/run.py`` (via :class:`benchmarks.common.Bench`):
+Engine-native by default: the sweep and the rebuild mode compile their
+array workloads into encoded op programs and execute each cell as ONE
+batched ``run_programs`` dispatch (``repro.array.ArrayEngine``), with
+op-granular fleet timing.  ``--legacy`` runs the original object
+``ZNSArray`` pipeline instead -- the bit-exactness oracle -- for
+cross-checks.
+
+Modes (same ``name,us_per_call,derived`` CSV schema as
+``benchmarks/run.py`` via :class:`benchmarks.common.Bench`):
 
 * sweep (default)::
 
-      PYTHONPATH=src python benchmarks/raid_zns.py [--quick]
+      PYTHONPATH=src python benchmarks/raid_zns.py [--quick] [--legacy]
 
   crosses device count x stripe-chunk size x parity on/off x allocator
   spec and emits one row per cell.
@@ -16,16 +23,19 @@ Two modes, same ``name,us_per_call,derived`` CSV schema as
 
   fills superzones through ``ZoneFS``, FINISHes them, simulates the
   whole fleet in one vmapped scan, and prints per-device DLWA/wear plus
-  the fleet makespan.
+  the fleet makespan.  (Always object-based: ZoneFS drives the
+  ``ZoneBackend`` surface interactively.)
 
 * rebuild-after-failure::
 
       PYTHONPATH=src python benchmarks/raid_zns.py --rebuild --devices 4
 
-  fails a member, reconstructs its chunks onto a replacement
-  (``ZNSArray.rebuild_device``: degraded reads on the survivors +
-  sequential re-append), and reports the rebuild traffic's fleet
-  makespan and its interference with concurrent host writes.
+  fails a member, reconstructs its chunks onto a replacement (survivor
+  degraded reads + sequential re-append), and reports the rebuild
+  traffic's fleet makespan and its interference with concurrent host
+  writes.  Engine-native this is one :func:`repro.array.rebuild_storm`
+  scenario -- all three variants (host / rebuild / contended) in one
+  dispatch; ``--legacy`` replays the PR 2 object pipeline.
 """
 
 from __future__ import annotations
@@ -41,9 +51,11 @@ for _p in (str(_ROOT), str(_ROOT / "src")):
         sys.path.insert(0, _p)
 
 from benchmarks.common import Bench
-from repro.array import ZNSArray
+from repro.array import (ArrayEngine, StormScenario, ZNSArray,
+                         rebuild_storm)
 from repro.core import (BLOCK, FIXED, SUPERBLOCK, timing, vchunk, zn540)
 from repro.core.elements import ElementSpec
+from repro.core.engine import ZoneEngine
 from repro.storage import ZoneFS
 
 SPECS: Dict[str, ElementSpec] = {
@@ -62,23 +74,46 @@ def build_array(n_devices: int, chunk_pages: Optional[int], parity: bool,
 
 def raid_benchmark(*, n_devices: int, chunk_pages: Optional[int] = None,
                    parity: bool = False, spec: ElementSpec = SUPERBLOCK,
-                   occupancy: float = 0.5, n_zones: int = 4) -> Dict:
+                   occupancy: float = 0.5, n_zones: int = 4,
+                   legacy: bool = False) -> Dict:
     """Fill ``n_zones`` superzones to ``occupancy``, FINISH each, and
-    time the resulting fleet traffic (data + parity + FINISH padding)
-    in one vmapped scan."""
-    arr = build_array(n_devices, chunk_pages, parity, spec)
+    fleet-time the resulting traffic (data + parity + FINISH padding).
+
+    Engine-native (default): the workload compiles to member op
+    programs, one batched scan executes them, and op-granular
+    ``simulate_fleet_ops`` times the fleet.  ``legacy``: the object
+    array + page-granular ``run_fleet_trace`` (the PR 1 pipeline)."""
+    if legacy:
+        arr = build_array(n_devices, chunk_pages, parity, spec)
+        pages = max(1, int(round(arr.zone_pages * occupancy)))
+        tagged = []
+        for z in range(min(n_zones, arr.max_active, arr.n_zones)):
+            tagged += arr.zone_write(z, pages, trace=True) or []
+            tagged += arr.zone_finish(z, trace=True) or []
+        fleet = timing.run_fleet_trace(
+            arr.flash, timing.group_tagged(tagged, n_devices))
+        rep = arr.report()
+        rep["fleet_makespan_s"] = fleet["fleet_makespan_s"]
+        rep["fleet_pages"] = float(fleet["n"])
+        for i in range(n_devices):
+            rep[f"dev{i}_makespan_s"] = fleet[f"dev{i}_makespan_s"]
+        per = arr.device_reports()
+        rep["mean_device_dlwa"] = sum(r["dlwa"] for r in per) / len(per)
+        return rep
+
+    flash, zone = zn540()
+    arr = ArrayEngine.build(flash, zone, spec, n_devices=n_devices,
+                            chunk_pages=chunk_pages, parity=parity,
+                            max_active=14)
     pages = max(1, int(round(arr.zone_pages * occupancy)))
-    tagged = []
     for z in range(min(n_zones, arr.max_active, arr.n_zones)):
-        tagged += arr.zone_write(z, pages, trace=True) or []
-        tagged += arr.zone_finish(z, trace=True) or []
-    fleet = timing.run_fleet_trace(
-        arr.flash, timing.group_tagged(tagged, n_devices))
+        arr.zone_write(z, pages)
+        arr.zone_finish(z)
+    # one op-axis quantum across all sweep cells -> a handful of
+    # compiled shapes for the whole sweep instead of one per cell
+    arr.run(pad_quantum=256)
     rep = arr.report()
-    rep["fleet_makespan_s"] = fleet["fleet_makespan_s"]
-    rep["fleet_pages"] = float(fleet["n"])
-    for i in range(n_devices):
-        rep[f"dev{i}_makespan_s"] = fleet[f"dev{i}_makespan_s"]
+    rep.update(arr.fleet_timing())
     per = arr.device_reports()
     rep["mean_device_dlwa"] = sum(r["dlwa"] for r in per) / len(per)
     return rep
@@ -149,11 +184,9 @@ def fleet_run(args: argparse.Namespace) -> Dict:
     return rep
 
 
-def rebuild_run(args: argparse.Namespace) -> Dict:
-    """Rebuild-after-failure: fill superzones, fail a member, reconstruct
-    the replacement's chunks via degraded reads + sequential re-append,
-    and measure the rebuild traffic's interference with concurrent host
-    I/O (one vmapped fleet scan per scenario)."""
+def rebuild_run_legacy(args: argparse.Namespace) -> Dict:
+    """The object-pipeline rebuild mode (PR 2): fill, fail, rebuild via
+    tagged traces, three per-scenario ``run_fleet_trace`` calls."""
     spec = SPECS[args.spec]
     flash, zone = zn540()
     n_dev = max(2, args.devices or 4)
@@ -201,13 +234,37 @@ def rebuild_run(args: argparse.Namespace) -> Dict:
         "replacement_dummy_pages": float(arr.devices[failed].dummy_pages),
     }
     print(f"# rebuild {arr.geom.describe()} spec={args.spec} "
-          f"failed={failed}")
+          f"failed={failed} (legacy)")
     for k, v in rep.items():
         print(f"{k},{v:.6g}")
     return rep
 
 
-def sweep(quick: bool) -> None:
+def rebuild_run(args: argparse.Namespace) -> Dict:
+    """Engine-native rebuild-after-failure: one
+    :func:`repro.array.rebuild_storm` scenario -- the host / rebuild /
+    contended variants compile onto a shared engine and execute in ONE
+    batched dispatch, then one op-granular timing dispatch reports the
+    interference ratio."""
+    if args.legacy:
+        return rebuild_run_legacy(args)
+    spec = SPECS[args.spec]
+    flash, zone = zn540()
+    n_dev = max(2, args.devices or 4)
+    eng = ZoneEngine(flash, zone, spec, max_active=14)
+    sc = StormScenario(n_devices=n_dev, chunk_pages=args.chunk_pages,
+                       n_zones_filled=4, occupancy=0.6)
+    out = rebuild_storm(eng, [sc])
+    rep = dict(out["scenarios"][0])
+    label = rep.pop("scenario")
+    print(f"# rebuild {label} spec={args.spec} "
+          f"failed={int(rep['failed_device'])} (engine)")
+    for k, v in rep.items():
+        print(f"{k},{v:.6g}")
+    return rep
+
+
+def sweep(quick: bool, legacy: bool = False) -> None:
     b = Bench()
     flash, zone = zn540()
     seg = zone.segment_pages(flash)
@@ -226,7 +283,7 @@ def sweep(quick: bool) -> None:
                     b.timeit(name, lambda n=n_dev, c=chunk, p=parity,
                              s=spec_name: raid_benchmark(
                                  n_devices=n, chunk_pages=c, parity=p,
-                                 spec=SPECS[s]),
+                                 spec=SPECS[s], legacy=legacy),
                              ("dlwa", "parity_overhead", "max_device_dlwa",
                               "fleet_makespan_s", "total_block_erases"))
     b.emit()
@@ -245,6 +302,9 @@ def main() -> None:
                     help="rebuild-after-failure mode: reconstruct a "
                          "replaced member and report interference with "
                          "host I/O")
+    ap.add_argument("--legacy", action="store_true",
+                    help="run the object ZNSArray pipeline instead of "
+                         "the engine-native path (cross-check oracle)")
     ap.add_argument("--quick", action="store_true")
     args = ap.parse_args()
     if args.rebuild:
@@ -252,7 +312,7 @@ def main() -> None:
     elif args.devices:
         fleet_run(args)
     else:
-        sweep(args.quick)
+        sweep(args.quick, legacy=args.legacy)
 
 
 if __name__ == "__main__":

@@ -107,6 +107,28 @@ def locate_page(zone_id: int, page: int, chunk_pages: int, n_data: int,
                                            n_devices, parity)
 
 
+def member_chunk_pages(zone_id: int, stripe: int, idx: int, *,
+                       chunk_pages: int, n_data: int, n_devices: int,
+                       parity: bool, wp: int, parity_emitted: int) -> int:
+    """Pages member ``idx`` physically wrote for chunk row ``stripe`` of
+    superzone ``zone_id`` (its parity chunk, or its data chunk's written
+    prefix), reconstructed from superzone metadata alone -- the member
+    itself may be gone.  Shared by the object array's rebuild and the
+    engine-native compiler's degraded-read / rebuild planners."""
+    c = chunk_pages
+    if parity:
+        p = parity_device_of(zone_id, stripe, n_devices)
+        if p == idx:
+            return c if stripe < parity_emitted else 0
+        slot = idx if idx < p else idx - 1
+    else:
+        slot = idx
+    if slot >= n_data:
+        return 0
+    start = stripe * c * n_data + slot * c
+    return max(0, min(c, wp - start))
+
+
 class ZNSArray:
     """N independent :class:`ZNSDevice` members behind one zone surface."""
 
@@ -362,18 +384,13 @@ class ZNSArray:
     def _member_chunk(self, zone_id: int, stripe: int, idx: int,
                       info: SuperZoneInfo) -> int:
         """Pages member ``idx`` physically wrote for chunk row ``stripe``
-        of ``zone_id`` (its parity chunk, or its data chunk's written
-        prefix), reconstructed from array metadata alone -- the member
-        itself may be gone."""
-        c, k = self.geom.chunk_pages, self.geom.n_data
-        p = self._parity_device(zone_id, stripe)
-        if p == idx:
-            return c if stripe < info.parity_emitted else 0
-        slot = idx if idx < p else idx - 1
-        if slot >= k:
-            return 0
-        start = stripe * c * k + slot * c
-        return max(0, min(c, info.wp - start))
+        of ``zone_id`` -- see :func:`member_chunk_pages` (module-level so
+        the engine-native planner shares the same source of truth)."""
+        return member_chunk_pages(
+            zone_id, stripe, idx, chunk_pages=self.geom.chunk_pages,
+            n_data=self.geom.n_data, n_devices=self.geom.n_devices,
+            parity=self.geom.parity, wp=info.wp,
+            parity_emitted=info.parity_emitted)
 
     def rebuild_device(self, idx: int) -> List[TaggedTrace]:
         """Replace member ``idx`` with a blank device and reconstruct its

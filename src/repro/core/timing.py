@@ -148,7 +148,9 @@ def simulate_fleet_ops(cols: jax.Array, pages: jax.Array,
                (from ``OpTrace.cols``).
       pages:   (n_lanes, n_ops) int32 pages the op moved (0 = skip).
       tenants: (n_lanes, n_ops) int32 tenant tag in ``[0, n_tenants)``.
-      t_page:  () f32 seconds per page program+transfer.
+      t_page:  () f32 seconds per page program+transfer, or
+               (n_lanes, n_ops) f32 per-op page cost (the array runner
+               prices READ rows at ``t_read + t_xfer``).
       n_luns/n_tenants: static sizes.
 
     Returns:
@@ -156,13 +158,15 @@ def simulate_fleet_ops(cols: jax.Array, pages: jax.Array,
        latencies (n_lanes, n_ops) f32, makespans (n_lanes,) f32).
     """
     P = cols.shape[-1]
+    t_page = jnp.broadcast_to(
+        jnp.asarray(t_page, jnp.float32), pages.shape)
 
-    def one_lane(cols_l, pages_l, ten_l):
+    def one_lane(cols_l, pages_l, ten_l, tp_l):
         def step(carry, x):
             lun_free, ten_done = carry
-            c, pg, t = x
+            c, pg, t, tp = x
             active = pg > 0
-            dur = (jnp.ceil(pg / P) * t_page).astype(jnp.float32)
+            dur = (jnp.ceil(pg / P) * tp).astype(jnp.float32)
             # an op starts when its LUN columns free up AND its tenant
             # has completed its previous op (closed-loop issue)
             start = jnp.maximum(
@@ -179,10 +183,10 @@ def simulate_fleet_ops(cols: jax.Array, pages: jax.Array,
         init = (jnp.zeros(n_luns, jnp.float32),
                 jnp.zeros(n_tenants, jnp.float32))
         (lun_free, _), (done, lat) = jax.lax.scan(
-            step, init, (cols_l, pages_l, ten_l))
+            step, init, (cols_l, pages_l, ten_l, tp_l))
         return done, lat, jnp.max(lun_free)
 
-    return jax.vmap(one_lane)(cols, pages, tenants)
+    return jax.vmap(one_lane)(cols, pages, tenants, t_page)
 
 
 def run_fleet_trace(flash: FlashGeometry,

@@ -119,20 +119,40 @@ OBJECTIVE_KEYS: Tuple[str, ...] = ("dlwa", "wear_cv", "p99_latency_s")
 
 @dataclasses.dataclass(frozen=True)
 class FleetConfig:
-    """One point of the allocator/geometry design space."""
+    """One point of the allocator/geometry/array design space.
+
+    ``spec`` may be a *tuple* of specs: member device ``d`` then gets
+    spec ``spec[d % len(spec)]`` (a heterogeneous-member array, per-lane
+    through the union config).  ``n_devices = 0`` means "the
+    evaluator's default member count" -- the backward-compatible value
+    every pre-array config carries.
+    """
 
     mix: str             # tenant mix (MIXES key)
     n_segments: int      # effective segments per member zone
     chunk_pages: int     # stripe unit (pages per member turn)
     parity: bool         # log-structured RAID-5 parity
     wear_aware: bool     # allocator policy
-    spec: ElementSpec = SUPERBLOCK  # zone storage-element granularity
+    spec: ElementSpec = SUPERBLOCK  # element granularity (or a mix tuple)
+    n_devices: int = 0   # array member count (0 = evaluator default)
+
+    def specs_mix(self) -> Tuple[ElementSpec, ...]:
+        """The spec tuple member ``d`` indexes with ``d % len``."""
+        if isinstance(self.spec, ElementSpec):
+            return (self.spec,)
+        return tuple(self.spec)
 
     def describe(self) -> str:
-        return (f"{self.mix}_s{self.n_segments}_c{self.chunk_pages}"
+        mix = self.specs_mix()
+        spec_name = ("+".join(s.name for s in mix) if len(mix) > 1
+                     else mix[0].name)
+        base = (f"{self.mix}_s{self.n_segments}_c{self.chunk_pages}"
                 f"_{'p1' if self.parity else 'p0'}"
                 f"_{'wa' if self.wear_aware else 'ff'}"
-                f"_{self.spec.name}")
+                f"_{spec_name}")
+        if self.n_devices:
+            base += f"_d{self.n_devices}"
+        return base
 
 
 @dataclasses.dataclass(frozen=True)
@@ -151,12 +171,20 @@ class SearchSpace:
     chunks: Tuple[int, ...] = (1536, 3072)
     parities: Tuple[bool, ...] = (False, True)
     wear: Tuple[bool, ...] = (True, False)
-    specs: Tuple[ElementSpec, ...] = (SUPERBLOCK,)
+    specs: Tuple = (SUPERBLOCK,)   # each entry: a spec, or a mix tuple
+    devices: Tuple[int, ...] = (0,)  # member counts (0 = default)
 
     @property
     def axes(self) -> Tuple[Tuple, ...]:
-        return (self.mixes, self.segments, self.chunks, self.parities,
+        # the devices axis joins the codec only when the space declares
+        # member counts to search: a default space keeps its 6-gene
+        # vectors, so seeded sampling/evolve trajectories from before
+        # the array axis stay bit-identical
+        base = (self.mixes, self.segments, self.chunks, self.parities,
                 self.wear, self.specs)
+        if self.devices != (0,):
+            base += (self.devices,)
+        return base
 
     def __len__(self) -> int:
         return math.prod(len(a) for a in self.axes)
@@ -169,8 +197,12 @@ class SearchSpace:
 
     def encode(self, fc: FleetConfig) -> Tuple[int, ...]:
         """Config -> per-axis index vector (raises if off the axes)."""
+        if fc.n_devices and self.devices == (0,):
+            raise ValueError(
+                f"{fc.describe()}: config sets n_devices but this space "
+                f"has no devices axis")
         vals = (fc.mix, fc.n_segments, fc.chunk_pages, fc.parity,
-                fc.wear_aware, fc.spec)
+                fc.wear_aware, fc.spec, fc.n_devices)[: len(self.axes)]
         return tuple(axis.index(v) for axis, v in zip(self.axes, vals))
 
     def grid(self) -> List[FleetConfig]:
@@ -188,11 +220,13 @@ def grid_space(*, mixes: Sequence[str] = tuple(MIXES),
                chunks: Sequence[int] = (1536, 3072),
                parities: Sequence[bool] = (False, True),
                wear: Sequence[bool] = (True, False),
-               specs: Sequence[ElementSpec] = (SUPERBLOCK,)
+               specs: Sequence = (SUPERBLOCK,),
+               devices: Sequence[int] = (0,)
                ) -> List[FleetConfig]:
     """Full cross product (defaults: 2*2*2*2*2 = 32 configs on zn540)."""
     return SearchSpace(tuple(mixes), tuple(segments), tuple(chunks),
-                       tuple(parities), tuple(wear), tuple(specs)).grid()
+                       tuple(parities), tuple(wear), tuple(specs),
+                       tuple(devices)).grid()
 
 
 def random_space(seed: int, n: int, *,
@@ -201,15 +235,24 @@ def random_space(seed: int, n: int, *,
                  chunks: Sequence[int] = (1536, 3072),
                  parities: Sequence[bool] = (False, True),
                  wear: Sequence[bool] = (True, False),
-                 specs: Sequence[ElementSpec] = (SUPERBLOCK,)
+                 specs: Sequence = (SUPERBLOCK,),
+                 devices: Sequence[int] = (0,)
                  ) -> List[FleetConfig]:
     """``n`` distinct configs sampled without replacement from the grid
     by a seeded PRNG -- deterministic under a fixed seed (tested)."""
     grid = grid_space(mixes=mixes, segments=segments, chunks=chunks,
-                      parities=parities, wear=wear, specs=specs)
+                      parities=parities, wear=wear, specs=specs,
+                      devices=devices)
     rng = np.random.default_rng(seed)
     idx = rng.choice(len(grid), size=min(n, len(grid)), replace=False)
     return [grid[i] for i in idx]
+
+
+def _nd_max(configs: Sequence[FleetConfig], default: int) -> int:
+    """Lanes per config in the rectangular batch: the widest member
+    count in the set (``n_devices = 0`` falls back to ``default``)."""
+    return max((fc.n_devices or default for fc in configs),
+               default=default)
 
 
 def build_fleet_batch(eng: ZoneEngine, configs: Sequence[FleetConfig],
@@ -218,11 +261,15 @@ def build_fleet_batch(eng: ZoneEngine, configs: Sequence[FleetConfig],
                       ) -> Tuple[np.ndarray, object, List[np.ndarray]]:
     """Expand configs to the rectangular lane batch of one dispatch.
 
-    Returns ``(programs (K*n_devices, n_ops, 5), dyn with (K*n_devices,)
-    leaves, merged logical programs per config)``.  The merged logical
-    program of config ``k`` (tenants interleaved, superzone-addressed,
-    pre-striping) is what the per-op legacy comparator replays through a
-    real ``ZNSArray`` -- both paths execute identical logical traffic.
+    Returns ``(programs (K*nd_max, n_ops, 5), dyn with (K*nd_max,)
+    leaves, merged logical programs per config)``, where ``nd_max`` is
+    :func:`_nd_max` -- a config whose ``n_devices`` is below the widest
+    member count in the set gets inert all-NOP pad lanes (configs with
+    mixed array sizes still batch into ONE rectangular dispatch).  The
+    merged logical program of config ``k`` (tenants interleaved,
+    superzone-addressed, pre-striping) is what the per-op legacy
+    comparator replays through a real ``ZNSArray`` -- both paths
+    execute identical logical traffic.
 
     ``fidelity`` < 1 truncates each merged logical program to its first
     ``ceil(fidelity * n_rows)`` rows *before* striping -- the low-cost
@@ -241,6 +288,7 @@ def build_fleet_batch(eng: ZoneEngine, configs: Sequence[FleetConfig],
         raise ValueError("FIXED elements span the whole static zone and "
                          "cannot take an effective-capacity override")
     seg_pages = eng.zone_geom.parallelism * eng.flash.pages_per_block
+    nd_max = _nd_max(configs, n_devices)
     lane_programs: List[np.ndarray] = []
     dyns = []
     merged_per_config: List[np.ndarray] = []
@@ -248,14 +296,17 @@ def build_fleet_batch(eng: ZoneEngine, configs: Sequence[FleetConfig],
         if fc.n_segments > eng.zone_geom.n_segments:
             raise ValueError(f"{fc}: n_segments exceeds the static "
                              f"geometry ({eng.zone_geom.n_segments})")
-        if fc.spec not in eng.members:
-            raise ValueError(
-                f"{fc}: spec {fc.spec.name} is not a member of the "
-                f"engine's config (members: "
-                f"{[s.name for s in eng.members]}); build the engine "
-                f"over the search space's spec set")
+        specs_mix = fc.specs_mix()
+        for s in specs_mix:
+            if s not in eng.members:
+                raise ValueError(
+                    f"{fc}: spec {s.name} is not a member of the "
+                    f"engine's config (members: "
+                    f"{[m.name for m in eng.members]}); build the engine "
+                    f"over the search space's spec set")
+        nd = fc.n_devices or n_devices
         member_zp = seg_pages * fc.n_segments
-        n_data = n_devices - (1 if fc.parity else 0)
+        n_data = nd - (1 if fc.parity else 0)
         cap = n_data * member_zp
         tenant_progs = MIXES[fc.mix](eng, cap)
         merged = interleave_tenants(
@@ -264,11 +315,16 @@ def build_fleet_batch(eng: ZoneEngine, configs: Sequence[FleetConfig],
             merged = merged[: max(1, math.ceil(fidelity * len(merged)))]
         merged_per_config.append(merged)
         lane_programs += stripe_program(
-            merged, n_devices=n_devices, chunk_pages=fc.chunk_pages,
+            merged, n_devices=nd, chunk_pages=fc.chunk_pages,
             parity=fc.parity, member_zone_pages=member_zp,
             parity_tenant=N_TENANTS)
-        dyns += [eng.dyn(spec=fc.spec, zone_pages=member_zp,
-                         wear_aware=fc.wear_aware)] * n_devices
+        dyns += [eng.dyn(spec=specs_mix[d % len(specs_mix)],
+                         zone_pages=member_zp,
+                         wear_aware=fc.wear_aware)
+                 for d in range(nd)]
+        # inert pad lanes square up a mixed-member-count batch
+        lane_programs += [np.zeros((0, 5), dtype=np.int32)] * (nd_max - nd)
+        dyns += [eng.dyn()] * (nd_max - nd)
     q = max(1, pad_quantum)
     n_ops = -(-max((len(p) for p in lane_programs), default=0) // q) * q
     return (pad_programs(lane_programs, n_ops=n_ops), stack_dyn(dyns),
@@ -359,9 +415,14 @@ class Evaluator:
         self.n_dispatches += 1
         self.n_evals += fidelity * len(configs)
         self.lane_ops += runner.dispatch_cost(res)
+        nd_max = _nd_max(configs, self.n_devices)
         rows = []
         for k, fc in enumerate(configs):
-            lanes = np.arange(k * self.n_devices, (k + 1) * self.n_devices)
+            nd = fc.n_devices or self.n_devices
+            # pad lanes (all-NOP) of a narrower config are excluded:
+            # they would dilute the per-config rollup with empty lanes
+            lanes = np.arange(k * nd_max, k * nd_max + nd)
+            specs_mix = fc.specs_mix()
             row: Dict = {
                 "config": fc.describe(),
                 "mix": fc.mix,
@@ -369,8 +430,8 @@ class Evaluator:
                 "chunk_pages": fc.chunk_pages,
                 "parity": float(fc.parity),
                 "wear_aware": float(fc.wear_aware),
-                "spec": fc.spec.name,
-                "n_devices": float(self.n_devices),
+                "spec": "+".join(s.name for s in specs_mix),
+                "n_devices": float(nd),
                 "fidelity": float(fidelity),
             }
             row.update(runner.config_report(res, self.eng, lanes))
@@ -472,12 +533,15 @@ def run_configs_legacy(flash: FlashGeometry, spec: ElementSpec,
     for fc, merged in zip(configs, merged_programs):
         geom = ZoneGeometry(parallelism=parallelism,
                             n_segments=fc.n_segments)
-        devices = [LegacyZNSDevice(flash, geom, fc.spec,
+        nd = fc.n_devices or n_devices
+        specs_mix = fc.specs_mix()
+        devices = [LegacyZNSDevice(flash, geom,
+                                   specs_mix[d % len(specs_mix)],
                                    max_active=max_active,
                                    wear_aware=fc.wear_aware)
-                   for _ in range(n_devices)]
+                   for d in range(nd)]
         arr = ZNSArray(devices, ArrayGeometry(
-            n_devices, fc.chunk_pages, fc.parity))
+            nd, fc.chunk_pages, fc.parity))
         tagged: List = []
         for row in merged:
             op, zone, n_pages = int(row[0]), int(row[1]), int(row[2])
@@ -499,7 +563,7 @@ def run_configs_legacy(flash: FlashGeometry, spec: ElementSpec,
         rep["wear_cv"] = float(w.std() / w.mean()) if w.mean() > 0 else 0.0
         if fleet_timing:
             fleet = timing.run_fleet_trace(
-                arr.flash, timing.group_tagged(tagged, n_devices))
+                arr.flash, timing.group_tagged(tagged, nd))
             rep["makespan_s"] = fleet["fleet_makespan_s"]
             rep["fleet_pages"] = float(fleet["n"])
         out.append(rep)
@@ -512,7 +576,8 @@ def fleet_vs_legacy_speedup(*, n_devices: int = 4,
                             flash: Optional[FlashGeometry] = None,
                             zone_geom: Optional[ZoneGeometry] = None,
                             max_active: int = 14,
-                            specs: Optional[Sequence[ElementSpec]] = None
+                            specs: Optional[Sequence[ElementSpec]] = None,
+                            legacy_configs: Optional[int] = None
                             ) -> Dict[str, float]:
     """Time the batched fleet sweep against the per-op legacy pipeline.
 
@@ -538,6 +603,16 @@ def fleet_vs_legacy_speedup(*, n_devices: int = 4,
     builds each config's members with its actual spec, making the DLWA
     assert an exactness oracle for the mixed-spec dispatch.  Returns
     the numbers ``tools/bench.py`` archives in ``BENCH_fleet.json``.
+
+    ``legacy_configs`` (< the config count) times the legacy legs on
+    only that config prefix, once, and linearly scales the measurement
+    -- the per-op pipeline is per-config sequential, so its cost is
+    linear in the config count, and timing all K at full repeats just
+    burns bench minutes.  The scaling is recorded honestly:
+    ``legacy_timed_configs``, the measured times
+    (``legacy_measured_s`` / ``legacy_replay_measured_s``) and
+    ``legacy_scale`` all land in the returned dict (and the artifact).
+    The DLWA exactness assert always covers EVERY config.
     """
     import time
 
@@ -560,34 +635,44 @@ def fleet_vs_legacy_speedup(*, n_devices: int = 4,
     def engine_pass():
         return evaluate_configs(eng, configs, n_devices=n_devices)
 
-    def legacy_pass(fleet_timing=True):
+    def legacy_pass(fleet_timing=True, n=None):
         return run_configs_legacy(
-            flash, specs[0], configs, merged,
+            flash, specs[0], configs[:n], merged[:n],
             parallelism=zone_geom.parallelism, n_devices=n_devices,
             max_active=max_active, fleet_timing=fleet_timing)
 
     rows = engine_pass()      # compile/warm both paths
-    legacy = legacy_pass()
+    legacy = legacy_pass()    # EVERY config: the exactness oracle
     for r, l in zip(rows, legacy):
         assert abs(r["dlwa"] - l["dlwa"]) < 1e-9, (
             f"engine/legacy DLWA mismatch on {r['config']}: "
             f"{r['dlwa']} vs {l['dlwa']}")
 
-    def timed(fn):
+    def timed(fn, reps=repeats):
         t0 = time.perf_counter()
-        for _ in range(repeats):
+        for _ in range(reps):
             fn()
-        return (time.perf_counter() - t0) / repeats
+        return (time.perf_counter() - t0) / reps
 
+    n_leg = min(legacy_configs or len(configs), len(configs))
+    scale = len(configs) / n_leg
+    leg_reps = repeats if n_leg == len(configs) else 1
     t_eng = timed(engine_pass)
-    t_leg = timed(legacy_pass)
-    t_leg_replay = timed(lambda: legacy_pass(fleet_timing=False))
+    t_leg_measured = timed(lambda: legacy_pass(n=n_leg), leg_reps)
+    t_leg_replay_measured = timed(
+        lambda: legacy_pass(fleet_timing=False, n=n_leg), leg_reps)
+    t_leg = t_leg_measured * scale
+    t_leg_replay = t_leg_replay_measured * scale
     return {
         "n_configs": float(len(configs)),
         "n_devices": float(n_devices),
         "fleet_ops": float(n_ops),
         "legacy_s": t_leg,
         "legacy_replay_s": t_leg_replay,
+        "legacy_measured_s": t_leg_measured,
+        "legacy_replay_measured_s": t_leg_replay_measured,
+        "legacy_timed_configs": float(n_leg),
+        "legacy_scale": scale,
         "engine_s": t_eng,
         "legacy_configs_s": len(configs) / t_leg,
         "engine_configs_s": len(configs) / t_eng,

@@ -25,6 +25,17 @@ Two tracked trajectories, each written as a JSON artifact:
   selection) vs the per-config legacy pipeline, whose members are
   built with each config's actual element spec -- the mixed-spec DLWA
   agreement is asserted before timing.
+  Since PR 7 the legacy legs of the fleet sweep are timed once at a
+  reduced config count and linearly scaled (the per-op pipeline is
+  per-config sequential; the exactness assert still covers every
+  config, and the measured/scaled split is recorded in the section
+  and in ``meta``), and an ``array`` section times the engine-native
+  ZNS-RAID data plane (``repro.array.ArrayEngine``: striping + parity
+  + rebuild compiled into ONE batched dispatch) vs the object
+  ``ZNSArray`` replay -- gate: >= 5x, with every per-array report
+  asserted bit-identical to the object oracle first -- plus a
+  rebuild-storm subsection asserted recompile-stable across repeated
+  same-shape dispatches.
 
 Both speedup comparisons assert metric agreement between the paths
 before timing anything.  Usage::
@@ -58,8 +69,9 @@ from repro.fleet.search import fleet_vs_legacy_speedup  # noqa: E402
 
 
 # bump when the artifact layout changes in a way bench_table must
-# know about (2: run provenance stamped in meta; obs_overhead section)
-SCHEMA_VERSION = 2
+# know about (2: run provenance stamped in meta; obs_overhead section;
+# 3: array section + scaled legacy fleet timing)
+SCHEMA_VERSION = 3
 
 
 def _git_sha() -> str:
@@ -235,6 +247,51 @@ def _evaluator_recompiles(eng, generations: int = 4) -> dict:
     }
 
 
+def _bench_array(args) -> dict:
+    """The engine-native array comparator + the rebuild-storm
+    recompile-stability probe (one shared engine, two identical
+    same-shape storm dispatches; the second must not grow the jit
+    cache)."""
+    from repro.array import (StormScenario, array_vs_legacy_speedup,
+                             rebuild_storm)
+    from repro.core import engine as zengine
+    from repro.core import timing as ctiming
+    from repro.core.elements import SUPERBLOCK
+    from repro.core.engine import ZoneEngine
+    from repro.core.geometry import zn540
+    from repro.obs import ObsConfig
+    from repro.obs.profile import RecompileCounter
+
+    rep = array_vs_legacy_speedup(
+        n_arrays=4 if args.quick else 8,
+        n_zones=4 if args.quick else 8,
+        repeats=args.repeats,
+        legacy_arrays=2)
+
+    flash, zone = zn540()
+    eng = ZoneEngine(flash, zone, SUPERBLOCK, max_active=14)
+    scenarios = [
+        StormScenario(n_devices=3, n_zones_filled=2, occupancy=0.5),
+        StormScenario(n_devices=4, n_zones_filled=2, occupancy=0.6),
+    ]
+    counter = RecompileCounter(run_programs=zengine.run_programs,
+                               simulate_fleet_ops=ctiming.simulate_fleet_ops)
+    obs = ObsConfig(n_buckets=16, n_tenants=3)
+    rebuild_storm(eng, scenarios, obs=obs)          # warm/compile
+    before = counter.counts()
+    t0 = time.perf_counter()
+    storm = rebuild_storm(eng, scenarios, obs=obs)  # must hit the cache
+    storm_s = time.perf_counter() - t0
+    delta = counter.delta(before)
+    rep["storm"] = {
+        "n_scenarios": float(len(scenarios)),
+        "dispatch_s": storm_s,
+        "recompiles": float(sum(delta.values())),
+        "scenarios": storm["scenarios"],
+    }
+    return rep
+
+
 def bench_fleet(args) -> int:
     from repro.core.elements import BLOCK, SUPERBLOCK, vchunk
     from repro.core.engine import ZoneEngine
@@ -247,7 +304,11 @@ def bench_fleet(args) -> int:
         configs = grid_space(segments=(22, 11), chunks=(1536,),
                              parities=(False, True), wear=(True,))
         space = SearchSpace(chunks=(1536,), parities=(False, True))
-    rep = fleet_vs_legacy_speedup(configs=configs, repeats=args.repeats)
+    # the legacy legs are timed on an 8-config prefix and scaled (the
+    # per-op pipeline is per-config sequential; the DLWA exactness
+    # assert inside still covers every config)
+    rep = fleet_vs_legacy_speedup(configs=configs, repeats=args.repeats,
+                                  legacy_configs=8)
 
     # mixed element specs in ONE union-config dispatch vs the per-spec
     # legacy pipeline (members built with each config's actual spec;
@@ -274,13 +335,22 @@ def bench_fleet(args) -> int:
     overhead = _obs_overhead(eng, repeats=args.repeats)
     recomp = _evaluator_recompiles(eng)
 
+    # PR 7: engine-native ZNS-RAID vs the object ZNSArray replay, plus
+    # the rebuild-storm recompile-stability probe
+    arr = _bench_array(args)
+
     artifact = {
         "fleet_sweep": rep,
         "mixed_spec": mixed,
         "evolve": evo,
         "obs_overhead": overhead,
         "evaluator_recompiles": recomp,
-        "meta": _meta(repeats=args.repeats, quick=bool(args.quick)),
+        "array": arr,
+        "meta": _meta(repeats=args.repeats, quick=bool(args.quick),
+                      legacy_timed_configs=rep["legacy_timed_configs"],
+                      legacy_scale=rep["legacy_scale"],
+                      array_legacy_timed=arr["legacy_timed_arrays"],
+                      array_legacy_scale=arr["legacy_scale"]),
     }
     args.fleet_out.write_text(json.dumps(artifact, indent=2) + "\n")
     print(f"fleet: {rep['n_configs']:.0f} configs x "
@@ -303,6 +373,14 @@ def bench_fleet(args) -> int:
           f"{overhead['off_s']:.3f}s -> {overhead['overhead']:.3f}x "
           f"overhead; evaluator run_programs cache per generation "
           f"{recomp['run_programs_cache_per_gen']}")
+    print(f"array: {arr['n_arrays']:.0f} arrays ({arr['lane_ops']:.0f} "
+          f"lane-ops), legacy {arr['legacy_s']:.2f}s "
+          f"({arr['legacy_timed_arrays']:.0f} timed, "
+          f"x{arr['legacy_scale']:.1f} scaled) vs engine "
+          f"{arr['engine_s']:.2f}s -> speedup {arr['speedup']:.1f}x; "
+          f"storm {arr['storm']['n_scenarios']:.0f} scenarios in "
+          f"{arr['storm']['dispatch_s']:.2f}s, "
+          f"{arr['storm']['recompiles']:.0f} recompile(s)")
     print(f"wrote {args.fleet_out}")
     rc = 0
     # PR 3's acceptance bar: batched fleet sweep >= 5x
@@ -323,6 +401,15 @@ def bench_fleet(args) -> int:
     if not recomp["stable_after_warmup"]:
         print("WARNING: Evaluator jit cache grew across same-shape "
               "generations (recompile leak)", file=sys.stderr)
+        rc = 1
+    # PR 7's acceptance bars: engine-native array >= 5x over the object
+    # replay, rebuild-storm dispatch shape-stable
+    if arr["speedup"] < 5.0:
+        print("WARNING: array speedup below the 5x target", file=sys.stderr)
+        rc = 1
+    if arr["storm"]["recompiles"] != 0:
+        print("WARNING: rebuild-storm dispatch recompiled on a repeated "
+              "same-shape call", file=sys.stderr)
         rc = 1
     return rc
 
