@@ -2,7 +2,8 @@
 
 Three strategies over the same :class:`repro.fleet.SearchSpace` (2
 tenant mixes x 2 effective zone geometries x 2 stripe-chunk sizes x
-parity on/off x wear-aware/first-fit x ``--specs`` element specs, each
+parity on/off x wear-aware/first-fit x ``--specs`` element specs x
+``--policies`` allocation policies, each
 config expanded to ``--devices`` member lanes), all scored through the
 shared batched :class:`repro.fleet.Evaluator`.  With more than one
 element spec the engine is built over the padded *union* config, so a
@@ -29,7 +30,8 @@ The front/archive is also written as JSON (``--out``, default
     PYTHONPATH=src python benchmarks/fleet_search.py [--quick]
         [--strategy {grid,random,evolve}] [--devices 4] [--seed S]
         [--random N] [--population K --generations G] [--target OBJ]
-        [--specs superblock,block,vchunk2] [--out fleet_pareto.json]
+        [--specs superblock,block,vchunk2]
+        [--policies traditional,silent] [--out fleet_pareto.json]
 
 With ``--obs`` the run re-dispatches the Pareto-front configs (up to
 ``--obs-configs``) through the flight recorder (:mod:`repro.obs`) and
@@ -209,6 +211,10 @@ def main() -> None:
                     help="comma-separated element-spec axis; >1 spec "
                          "builds the padded union engine (mixed-spec "
                          "lanes, one dispatch)")
+    ap.add_argument("--policies", type=str, default="traditional",
+                    help="comma-separated alloc_policy axis "
+                         "(traditional and/or silent); 'silent' lanes "
+                         "commit zone blocks on the fly (SilentZNS)")
     ap.add_argument("--out", type=str, default="fleet_pareto.json",
                     help="Pareto front JSON ('' to skip)")
     ap.add_argument("--obs", action="store_true",
@@ -226,19 +232,29 @@ def main() -> None:
         specs = tuple(parse_spec(s) for s in args.specs.split(","))
     except argparse.ArgumentTypeError as exc:
         ap.error(str(exc))   # clean usage error, not a raw traceback
+    policies = tuple(p.strip() for p in args.policies.split(",")
+                     if p.strip())
+    bad = [p for p in policies if p not in ("traditional", "silent")]
+    if bad or not policies:
+        ap.error(f"--policies must name traditional and/or silent, "
+                 f"got {args.policies!r}")
+    if "silent" in policies and any(s.name == "fixed" for s in specs):
+        ap.error("--policies silent cannot combine with --specs fixed "
+                 "(FIXED elements have no block collection to vary)")
     if args.random and args.strategy == "grid":
         args.strategy = "random"
     if args.strategy == "random" and args.random < 1:
-        args.random = len(grid_space(specs=specs))  # the grid's size
+        # the grid's size
+        args.random = len(grid_space(specs=specs, policies=policies))
 
     flash, zone = zn540()
     if args.quick:
         specs = specs[:1]
         axes = dict(segments=(22, 11), chunks=(1536,), parities=(False,),
-                    wear=(True, False), specs=specs)
+                    wear=(True, False), specs=specs, policies=policies)
         n_devices = 3
     else:
-        axes = dict(specs=specs)
+        axes = dict(specs=specs, policies=policies)
         n_devices = args.devices
     eng = ZoneEngine(flash, zone, specs if len(specs) > 1 else specs[0],
                      max_active=14)

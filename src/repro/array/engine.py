@@ -146,6 +146,7 @@ class ArrayEngine:
                  zone_pages: Optional[int] = None,
                  max_active: Optional[int] = None,
                  wear_aware: Optional[bool] = None,
+                 alloc_policy: Optional[str] = None,
                  n_tenants: int = 1):
         self.eng = eng
         self.geom = geom
@@ -175,10 +176,15 @@ class ArrayEngine:
                     f"engine's config; build the engine over the spec "
                     f"set")
         self.member_specs = member_specs
-        # per-member wear_aware: a rebuilt member is a stock blank
-        # device (the object array's replacement drops the override)
+        # per-member wear_aware / alloc_policy: a rebuilt member is a
+        # stock blank device (the object array's replacement drops the
+        # overrides).  Note the bit-exactness oracle (the object
+        # ZNSArray) has no silent allocator, so wear rollups are only
+        # cross-checked against it when alloc_policy is unset.
         self._member_wear_aware: List[Optional[bool]] = (
             [wear_aware] * geom.n_devices)
+        self._member_alloc_policy: List[Optional[str]] = (
+            [alloc_policy] * geom.n_devices)
         self.n_tenants = int(n_tenants)
         self.parity_tenant = self.n_tenants
         self.rebuild_tenant = self.n_tenants + 1
@@ -199,6 +205,7 @@ class ArrayEngine:
     def build(cls, flash, zone_geom, spec, *, n_devices: int,
               chunk_pages: Optional[int] = None, parity: bool = False,
               max_active: int = 14, wear_aware: Optional[bool] = None,
+              alloc_policy: Optional[str] = None,
               n_tenants: int = 1) -> "ArrayEngine":
         """Own-engine constructor; ``chunk_pages`` defaults to one
         segment, like :meth:`ZNSArray.build`.  ``spec`` may be a
@@ -215,7 +222,7 @@ class ArrayEngine:
         eng = ZoneEngine(flash, zone_geom, spec, max_active=max_active)
         return cls(eng, ArrayGeometry(n_devices, chunk_pages, parity),
                    member_specs=member_specs, wear_aware=wear_aware,
-                   n_tenants=n_tenants)
+                   alloc_policy=alloc_policy, n_tenants=n_tenants)
 
     # ------------------------------------------------------------------ #
     # geometry / metrics mirror (ZoneBackend-shaped surface)
@@ -472,8 +479,10 @@ class ArrayEngine:
                     (zengine.OP_FINISH, z, 0, 0, self.rebuild_tenant))
         self._rows[idx] = new_rows
         # the replacement is a stock device: the object array builds it
-        # without the wear_aware override, so the oracle does too
+        # without the wear_aware / alloc_policy overrides, so the
+        # oracle does too
         self._member_wear_aware[idx] = None
+        self._member_alloc_policy[idx] = None
         self.failed.discard(idx)
         self._dirty = True
         return plan
@@ -491,6 +500,8 @@ class ArrayEngine:
             kw["max_active"] = self.max_active
         if self._member_wear_aware[idx] is not None:
             kw["wear_aware"] = self._member_wear_aware[idx]
+        if self._member_alloc_policy[idx] is not None:
+            kw["alloc_policy"] = self._member_alloc_policy[idx]
         return self.eng.dyn(**kw)
 
     def member_programs(self) -> List[np.ndarray]:

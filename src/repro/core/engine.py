@@ -71,6 +71,15 @@ F_HOST = 1  # flags bit0: host (vs dummy) write
 
 ZONE_EMPTY, ZONE_OPEN, ZONE_FULL = 0, 1, 2
 
+# DynConfig.alloc_policy values: TRADITIONAL keeps the legacy fixed
+# element-grid mapping (a zone's whole element set is committed at ALLOC
+# time); SILENT is the paper's on-the-fly allocation -- a zone is an
+# arbitrary block collection sized to the write at hand, chosen as the
+# cheapest per-LUN set under a wear-leveling bound and grown on demand.
+POLICY_TRADITIONAL, POLICY_SILENT = 0, 1
+_POLICY_NAMES = {"traditional": POLICY_TRADITIONAL,
+                 "silent": POLICY_SILENT}
+
 _BIG = 2**30  # sentinel wear for unavailable slots (matches allocator.py)
 
 
@@ -232,6 +241,24 @@ class DynConfig(NamedTuple):
     lets one ``run_programs`` dispatch mix element specs per lane --
     element-exact vs a device built with the member spec outright
     (tested in ``tests/test_union_spec.py``).
+
+    The allocation-policy axis (the paper's SilentZNS proposal):
+
+    * ``alloc_policy`` -- () i32, :data:`POLICY_TRADITIONAL` (default)
+      or :data:`POLICY_SILENT`.  Traditional commits the zone's whole
+      element grid at ALLOC time (the legacy round-robin window +
+      cheapest-groups fallback).  Silent sizes the claim to the op at
+      hand: ALLOC claims ``ceil(n_pages / pages_per_rank)`` element
+      ranks (at least one per group -- the parallelism floor stays
+      ``zone_groups`` distinct groups) from the *cheapest* groups under
+      the wear bound, and a WRITE that outruns the committed ranks
+      claims more on the fly before it lands.  Traditional lanes are
+      bit-identical to the pre-policy allocator (property-fuzzed in
+      ``tests/test_silentzns_property.py``).
+    * ``wear_bound`` -- () i32, silent-policy wear-leveling bound: an
+      element is claimable only while its wear is within ``wear_bound``
+      erases of the least-worn free element.  Defaults to unbounded;
+      ignored by traditional lanes.
     """
 
     zone_pages: jax.Array
@@ -244,12 +271,16 @@ class DynConfig(NamedTuple):
     zone_groups: jax.Array
     slot_stride: jax.Array
     pages_per_element: jax.Array
+    alloc_policy: jax.Array
+    wear_bound: jax.Array
 
 
 def make_dyn(cfg: EngineConfig, *, zone_pages: Optional[int] = None,
              max_active: Optional[int] = None, n_zones: Optional[int] = None,
              wear_aware: Optional[bool] = None,
-             spec: Optional[ElementSpec] = None) -> DynConfig:
+             spec: Optional[ElementSpec] = None,
+             alloc_policy=None,
+             wear_bound: Optional[int] = None) -> DynConfig:
     """A :class:`DynConfig` defaulting every field to ``cfg``'s value.
 
     ``spec`` selects a member of ``cfg.members`` (a union config's spec
@@ -260,13 +291,21 @@ def make_dyn(cfg: EngineConfig, *, zone_pages: Optional[int] = None,
     meaningful instead of mixing cross-member maxima into a spec no
     device has.
 
+    ``alloc_policy`` is ``"traditional"`` / ``"silent"`` (or the
+    :data:`POLICY_TRADITIONAL` / :data:`POLICY_SILENT` ints);
+    ``wear_bound`` is the silent policy's wear-leveling bound in erases
+    (``None`` = unbounded).  See :class:`DynConfig`.
+
     Overrides are validated eagerly: ``zone_pages`` / ``n_zones`` /
     ``max_active`` beyond the padded static config would index past the
     padded tables (silently wrong metrics), so out-of-range values
     raise ``ValueError`` here instead.  Shrinking ``zone_pages`` on a
     FIXED-kind lane is likewise rejected: FIXED elements *are* the
     whole static zone, so there is no smaller element set for the
-    override to claim (see :class:`DynConfig`).
+    override to claim (see :class:`DynConfig`).  ``alloc_policy`` /
+    ``wear_bound`` get the same treatment: an unknown policy or a
+    negative bound would otherwise flow into the jitted selection as a
+    silently-traditional lane or an always-empty claimable set.
     """
     if spec is not None:
         sv = cfg.member_values(spec)
@@ -297,6 +336,30 @@ def make_dyn(cfg: EngineConfig, *, zone_pages: Optional[int] = None,
         raise ValueError(
             f"max_active override {max_active} out of range "
             f"(static config allows {cfg.max_active} active zones)")
+    if alloc_policy is None:
+        policy = POLICY_TRADITIONAL
+    elif isinstance(alloc_policy, str):
+        if alloc_policy not in _POLICY_NAMES:
+            raise ValueError(
+                f"alloc_policy override {alloc_policy!r} unknown "
+                f"(expected one of {sorted(_POLICY_NAMES)} or the "
+                f"POLICY_* ints)")
+        policy = _POLICY_NAMES[alloc_policy]
+    else:
+        policy = int(alloc_policy)
+        if policy not in (POLICY_TRADITIONAL, POLICY_SILENT):
+            raise ValueError(
+                f"alloc_policy override {alloc_policy!r} unknown "
+                f"(expected one of {sorted(_POLICY_NAMES)} or the "
+                f"POLICY_* ints)")
+    if policy == POLICY_SILENT and kind is ElementKind.FIXED:
+        raise ValueError(
+            "alloc_policy 'silent' needs a block collection to vary; "
+            "FIXED elements are the whole static zone")
+    if wear_bound is not None and not 0 <= wear_bound <= _BIG:
+        raise ValueError(
+            f"wear_bound override {wear_bound} out of range "
+            f"(must be in [0, {_BIG}])")
     i32 = jnp.int32
     return DynConfig(
         zone_pages=jnp.asarray(
@@ -313,6 +376,9 @@ def make_dyn(cfg: EngineConfig, *, zone_pages: Optional[int] = None,
         zone_groups=jnp.asarray(sv.zone_groups, i32),
         slot_stride=jnp.asarray(sv.slot_stride, i32),
         pages_per_element=jnp.asarray(sv.pages_per_element, i32),
+        alloc_policy=jnp.asarray(policy, i32),
+        wear_bound=jnp.asarray(
+            _BIG if wear_bound is None else wear_bound, i32),
     )
 
 
@@ -543,6 +609,24 @@ def _cheapest_groups(cfg: EngineConfig, dyn: DynConfig, w2, a2, take_eff
     return jnp.zeros(cfg.n_groups, bool).at[order].set(picked)
 
 
+def _wear_bounded_avail(cfg: EngineConfig, dyn: DynConfig, w2, a2
+                        ) -> jax.Array:
+    """The silent policy's wear-leveling bound as an availability mask:
+    elements worn more than ``dyn.wear_bound`` erases past the
+    least-worn free element are presented busy, so neither the group
+    selection nor the per-group claim can pick them.  Subtraction (not
+    ``min_wear + bound``) keeps the unbounded default (``_BIG``) free of
+    i32 overflow."""
+    ng = dyn.n_elements // dyn.per_group
+    grow = jnp.arange(cfg.n_groups, dtype=jnp.int32)[:, None]
+    col = jnp.arange(cfg.per_group, dtype=jnp.int32)[None, :]
+    free = (a2 == AVAIL_FREE) | (a2 == AVAIL_INVALID)
+    free = free & (grow < ng) & (col < dyn.per_group)
+    min_wear = jnp.min(jnp.where(free, w2, _BIG))
+    in_bound = (w2 - min_wear) <= dyn.wear_bound
+    return jnp.where(in_bound, a2, AVAIL_VALID)
+
+
 def _where_state(pred, new: DeviceState, old: DeviceState) -> DeviceState:
     return jax.tree_util.tree_map(
         lambda a, b: jnp.where(pred, a, b), new, old)
@@ -552,9 +636,17 @@ def _where_state(pred, new: DeviceState, old: DeviceState) -> DeviceState:
 # transitions
 # ----------------------------------------------------------------------- #
 def _alloc(cfg: EngineConfig, dyn: DynConfig, state: DeviceState,
-           zone: jax.Array) -> Tuple[DeviceState, jax.Array]:
+           zone: jax.Array, hint: jax.Array
+           ) -> Tuple[DeviceState, jax.Array]:
     """ALLOC a zone's elements (legacy ``_allocate_zone``).  Caller guards
-    on the zone being EMPTY; this applies the selection + deferred erase."""
+    on the zone being EMPTY; this applies the selection + deferred erase.
+
+    ``hint`` is the triggering op's ``n_pages`` (0 for a bare ALLOC with
+    no size).  Traditional lanes ignore it; a silent lane commits only
+    ``ceil(hint / pages_per_rank)`` element ranks (the whole grid when
+    the hint is 0), one element per winning group per rank, from the
+    cheapest wear-bounded groups -- :func:`_grow_silent` claims the rest
+    on demand when later writes outrun the commitment."""
     n = cfg.n_elements
     limit_ok = state.n_active < dyn.max_active
 
@@ -588,22 +680,47 @@ def _alloc(cfg: EngineConfig, dyn: DynConfig, state: DeviceState,
         take_eff = jnp.clip(
             n_slots_eff // jnp.maximum(dyn.slot_stride, 1),
             1, dyn.take).astype(jnp.int32)
-        elig1 = _rr_mask(cfg, dyn, state.rr_next)
-        cols1, f1 = _take_lowest(cfg, dyn, w2, a2, elig1,
-                                 dyn.wear_aware, take_eff)
 
-        # round-robin window exhausted: cheapest feasible groups instead
-        # (the legacy fallback always uses the wear-aware selection);
-        # lazily computed -- the common path pays for one top_k only
-        def fallback(_):
-            elig2 = _cheapest_groups(cfg, dyn, w2, a2, take_eff)
-            cols2, f2 = _take_lowest(cfg, dyn, w2, a2, elig2, True,
-                                     take_eff)
-            return cols2, f2, elig2
+        def traditional(_):
+            elig1 = _rr_mask(cfg, dyn, state.rr_next)
+            cols1, f1 = _take_lowest(cfg, dyn, w2, a2, elig1,
+                                     dyn.wear_aware, take_eff)
 
-        cols, f2, elig = jax.lax.cond(
-            f1, lambda _: (cols1, f1, elig1), fallback, None)
-        feasible = f1 | f2
+            # round-robin window exhausted: cheapest feasible groups
+            # instead (the legacy fallback always uses the wear-aware
+            # selection); lazily computed -- the common path pays for
+            # one top_k only
+            def fallback(_):
+                elig2 = _cheapest_groups(cfg, dyn, w2, a2, take_eff)
+                cols2, f2 = _take_lowest(cfg, dyn, w2, a2, elig2, True,
+                                         take_eff)
+                return cols2, f2, elig2
+
+            cols1, f2, elig1 = jax.lax.cond(
+                f1, lambda _: (cols1, f1, elig1), fallback, None)
+            # legacy advances the window even when the allocation then
+            # fails
+            ng = dyn.n_elements // dyn.per_group
+            rr = (state.rr_next + dyn.zone_groups) % ng
+            return cols1, f1 | f2, elig1, rr, dyn.take
+
+        def silent(_):
+            # on-the-fly commitment: only the ranks the size hint needs
+            # (>= 1, keeping the parallelism floor of one element per
+            # winning group), from the cheapest wear-bounded groups;
+            # the round-robin window is not consumed
+            per_rank = dyn.pages_per_element * dyn.zone_groups
+            ranks_hint = -(-hint // jnp.maximum(per_rank, 1))
+            take_s = jnp.clip(jnp.where(hint > 0, ranks_hint, take_eff),
+                              1, take_eff).astype(jnp.int32)
+            a2b = _wear_bounded_avail(cfg, dyn, w2, a2)
+            elig_s = _cheapest_groups(cfg, dyn, w2, a2b, take_s)
+            cols_s, f_s = _take_lowest(cfg, dyn, w2, a2b, elig_s, True,
+                                       take_s)
+            return cols_s, f_s, elig_s, state.rr_next, take_s
+
+        cols, feasible, elig, rr_next, rank_lim = jax.lax.cond(
+            dyn.alloc_policy == POLICY_SILENT, silent, traditional, None)
         # every eligible group contributes exactly ``take`` elements, so
         # the winning groups are the eligible window itself (ascending)
         win = jnp.nonzero(elig, size=cfg.zone_groups,
@@ -613,13 +730,16 @@ def _alloc(cfg: EngineConfig, dyn: DynConfig, state: DeviceState,
         cpos = jnp.arange(cfg.zone_groups, dtype=jnp.int32)[:, None]
         # window positions past the lane's zone_groups are union
         # padding: their slots divert to the scratch column and their
-        # elements to the scratch element.  Ranks past the lane's take
-        # need no mask -- their slots land at or past the lane's slot
-        # count, which claiming (slot < n_slots_eff) already excludes.
+        # elements to the scratch element.  The rank mask is an
+        # identity for traditional lanes (rank_lim = dyn.take: a slot
+        # below n_slots_eff already implies rank < take because
+        # zone_groups <= slot_stride for every gridded kind) and is
+        # what sizes a silent lane's partial commitment.
         valid = cpos < dyn.zone_groups
         raw_slots = ranks * dyn.slot_stride + cpos
         slots = jnp.where(valid, raw_slots, cfg.n_slots).reshape(-1)
-        claimed = (valid & (raw_slots < n_slots_eff)).reshape(-1)
+        claimed = (valid & (raw_slots < n_slots_eff)
+                   & (ranks < rank_lim)).reshape(-1)
         elems_row = jnp.full(cfg.n_slots + 1, -1, jnp.int32).at[
             slots].set(jnp.where(claimed, eids.reshape(-1),
                                  -1))[: cfg.n_slots]
@@ -628,9 +748,6 @@ def _alloc(cfg: EngineConfig, dyn: DynConfig, state: DeviceState,
         lpg = cfg.parallelism // dyn.zone_groups
         c = jnp.arange(cfg.parallelism, dtype=jnp.int32)
         cols_row = win[c // lpg] * lpg + c % lpg
-        # legacy advances the window even when the allocation then fails
-        ng = dyn.n_elements // dyn.per_group
-        rr_next = (state.rr_next + dyn.zone_groups) % ng
 
     if cfg.kind is ElementKind.FIXED:
         flat = elems_row.reshape(-1)
@@ -688,17 +805,94 @@ def _written_per_slot(cfg: EngineConfig, dyn: DynConfig, wp: jax.Array
         blk.reshape(-1))
 
 
+def _grow_silent(cfg: EngineConfig, dyn: DynConfig, state: DeviceState,
+                 zone, wp1, pred) -> Tuple[DeviceState, jax.Array]:
+    """Silent-policy on-demand commitment: when a write will advance the
+    zone pointer past the element ranks claimed so far, claim the
+    missing ranks (cheapest wear-bounded elements of the zone's own
+    winning groups, keeping the slot grid rectangular) before the write
+    lands.  A no-op (ok) for traditional lanes, FULL zones, and writes
+    the commitment already covers."""
+    if cfg.kind is ElementKind.FIXED:
+        return state, jnp.asarray(True)
+    n_slots_eff = dyn.zone_pages // dyn.pages_per_element
+    take_eff = jnp.clip(
+        n_slots_eff // jnp.maximum(dyn.slot_stride, 1),
+        1, dyn.take).astype(jnp.int32)
+    per_rank = dyn.pages_per_element * dyn.zone_groups
+    need = jnp.clip(-(-wp1 // jnp.maximum(per_rank, 1)),
+                    1, take_eff).astype(jnp.int32)
+    # committed ranks: the claim grid is rectangular (every rank spans
+    # all zone_groups window positions), so the row's live-slot count
+    # divides exactly
+    have = ((state.zone_elems[zone] >= 0).sum()
+            // jnp.maximum(dyn.zone_groups, 1)).astype(jnp.int32)
+    grow = (pred & (dyn.alloc_policy == POLICY_SILENT)
+            & (need > have))
+
+    def grow_fn(s):
+        n = cfg.n_elements
+        pg = cfg.per_group
+        w2 = s.elem_wear[:n].reshape(cfg.n_groups, pg)
+        a2 = s.elem_avail[:n].reshape(cfg.n_groups, pg)
+        a2b = _wear_bounded_avail(cfg, dyn, w2, a2)
+        # the zone's winning groups, recovered from its column map
+        # (ascending, exactly as _alloc laid them out)
+        lpg = cfg.parallelism // dyn.zone_groups
+        pos = jnp.arange(cfg.zone_groups, dtype=jnp.int32)
+        win_g = s.zone_cols[zone][
+            jnp.clip(pos * lpg, 0, cfg.parallelism - 1)] // lpg
+        gidx = jnp.where(pos < dyn.zone_groups, win_g, cfg.n_groups)
+        elig = jnp.zeros(cfg.n_groups, bool).at[gidx].set(True)
+        k = need - have
+        cols, fg = _take_lowest(cfg, dyn, w2, a2b, elig, True, k)
+        win = jnp.nonzero(elig, size=cfg.zone_groups,
+                          fill_value=0)[0].astype(jnp.int32)
+        eids = (win[:, None] * pg + cols[win]).astype(jnp.int32)
+        ranks = jnp.arange(cfg.take, dtype=jnp.int32)[None, :]
+        cpos = jnp.arange(cfg.zone_groups, dtype=jnp.int32)[:, None]
+        raw_slots = (have + ranks) * dyn.slot_stride + cpos
+        claimed = ((cpos < dyn.zone_groups) & (ranks < k)
+                   & (raw_slots < n_slots_eff))
+        slots = jnp.where(claimed, raw_slots, cfg.n_slots).reshape(-1)
+        claimed = claimed.reshape(-1)
+        flat = jnp.where(claimed, eids.reshape(-1), n)
+        row = jnp.append(s.zone_elems[zone], jnp.int32(-1))
+        elems_row = row.at[slots].set(
+            jnp.where(claimed, eids.reshape(-1), -1))[: cfg.n_slots]
+        # deferred physical erase, exactly as at ALLOC time
+        inv = claimed & (s.elem_avail[flat] == AVAIL_INVALID)
+        erase_delta = (inv.sum().astype(jnp.int32)
+                       * (dyn.pages_per_element // cfg.pages_per_block))
+        new = s._replace(
+            elem_wear=s.elem_wear.at[flat].add(inv.astype(jnp.int32)),
+            elem_avail=s.elem_avail.at[flat].set(AVAIL_ALLOCATED),
+            elem_pages=s.elem_pages.at[flat].set(0),
+            elem_zone=s.elem_zone.at[flat].set(zone),
+            zone_elems=s.zone_elems.at[zone].set(elems_row),
+            block_erases=s.block_erases + erase_delta,
+            alloc_calls=s.alloc_calls + 1,
+        )
+        return _where_state(fg, new, s), fg
+
+    return jax.lax.cond(
+        grow, grow_fn, lambda s: (s, jnp.asarray(True)), state)
+
+
 def _write(cfg: EngineConfig, dyn: DynConfig, state: DeviceState,
            zone, n_pages, host) -> Tuple[DeviceState, jax.Array]:
     zst0 = state.zone_state[zone]
     state, aok = jax.lax.cond(
         zst0 == ZONE_EMPTY,
-        lambda s: _alloc(cfg, dyn, s, zone),
+        lambda s: _alloc(cfg, dyn, s, zone, n_pages),
         lambda s: (s, jnp.asarray(True)),
         state)
     wp0 = state.zone_wp[zone]
     wp1 = wp0 + n_pages
-    ok = (zst0 != ZONE_FULL) & aok & (wp1 <= dyn.zone_pages)
+    fits = wp1 <= dyn.zone_pages
+    state, gok = _grow_silent(cfg, dyn, state, zone, wp1,
+                              (zst0 != ZONE_FULL) & aok & fits)
+    ok = (zst0 != ZONE_FULL) & aok & fits & gok
 
     written = _written_per_slot(cfg, dyn, wp1).astype(jnp.int32)
     elems = state.zone_elems[zone]
@@ -795,7 +989,8 @@ def _apply_op_impl(cfg: EngineConfig, dyn: DynConfig, state: DeviceState,
 
     def alloc_branch(s):
         zst0 = s.zone_state[zone]
-        s2, ok = _alloc(cfg, dyn, s, zone)
+        # row[2] rides along as the silent policy's size hint
+        s2, ok = _alloc(cfg, dyn, s, zone, n_pages)
         # no-op (and fine) when the zone is already mapped
         return (_where_state(zst0 == ZONE_EMPTY, s2, s),
                 jnp.where(zst0 == ZONE_EMPTY, ok, True))
@@ -965,8 +1160,8 @@ class ZoneEngine:
 
     def dyn(self, **overrides) -> DynConfig:
         """Per-call :class:`DynConfig` (``zone_pages`` / ``max_active`` /
-        ``n_zones`` / ``wear_aware`` / ``spec`` keywords; others from
-        ``cfg``)."""
+        ``n_zones`` / ``wear_aware`` / ``spec`` / ``alloc_policy`` /
+        ``wear_bound`` keywords; others from ``cfg``)."""
         return make_dyn(self.cfg, **overrides)
 
     def member_element_ids(self, spec: ElementSpec) -> np.ndarray:

@@ -132,9 +132,10 @@ class FleetConfig:
     n_segments: int      # effective segments per member zone
     chunk_pages: int     # stripe unit (pages per member turn)
     parity: bool         # log-structured RAID-5 parity
-    wear_aware: bool     # allocator policy
+    wear_aware: bool     # allocator element selection (wear vs first-fit)
     spec: ElementSpec = SUPERBLOCK  # element granularity (or a mix tuple)
     n_devices: int = 0   # array member count (0 = evaluator default)
+    alloc_policy: str = "traditional"  # zone mapping: traditional|silent
 
     def specs_mix(self) -> Tuple[ElementSpec, ...]:
         """The spec tuple member ``d`` indexes with ``d % len``."""
@@ -152,6 +153,8 @@ class FleetConfig:
                 f"_{spec_name}")
         if self.n_devices:
             base += f"_d{self.n_devices}"
+        if self.alloc_policy != "traditional":
+            base += f"_{self.alloc_policy}"
         return base
 
 
@@ -173,18 +176,29 @@ class SearchSpace:
     wear: Tuple[bool, ...] = (True, False)
     specs: Tuple = (SUPERBLOCK,)   # each entry: a spec, or a mix tuple
     devices: Tuple[int, ...] = (0,)  # member counts (0 = default)
+    policies: Tuple[str, ...] = ("traditional",)  # alloc_policy values
+
+    @property
+    def _axes_fields(self) -> Tuple[Tuple[Tuple, str], ...]:
+        # the devices / policies axes join the codec only when the
+        # space declares values to search: a default space keeps its
+        # 6-gene vectors, so seeded sampling/evolve trajectories from
+        # before those axes stay bit-identical.  Genes map to configs
+        # by *field name* (not position): with policies present but
+        # devices absent, a positional FleetConfig(*vals) would land
+        # the policy in n_devices.
+        base = [(self.mixes, "mix"), (self.segments, "n_segments"),
+                (self.chunks, "chunk_pages"), (self.parities, "parity"),
+                (self.wear, "wear_aware"), (self.specs, "spec")]
+        if self.devices != (0,):
+            base.append((self.devices, "n_devices"))
+        if self.policies != ("traditional",):
+            base.append((self.policies, "alloc_policy"))
+        return tuple(base)
 
     @property
     def axes(self) -> Tuple[Tuple, ...]:
-        # the devices axis joins the codec only when the space declares
-        # member counts to search: a default space keeps its 6-gene
-        # vectors, so seeded sampling/evolve trajectories from before
-        # the array axis stay bit-identical
-        base = (self.mixes, self.segments, self.chunks, self.parities,
-                self.wear, self.specs)
-        if self.devices != (0,):
-            base += (self.devices,)
-        return base
+        return tuple(a for a, _ in self._axes_fields)
 
     def __len__(self) -> int:
         return math.prod(len(a) for a in self.axes)
@@ -192,8 +206,9 @@ class SearchSpace:
     def decode(self, genes: Sequence[int]) -> FleetConfig:
         """Per-axis index vector -> config (indexes taken modulo each
         axis length, so any int vector decodes)."""
-        vals = [axis[g % len(axis)] for axis, g in zip(self.axes, genes)]
-        return FleetConfig(*vals)
+        return FleetConfig(**{
+            f: axis[g % len(axis)]
+            for (axis, f), g in zip(self._axes_fields, genes)})
 
     def encode(self, fc: FleetConfig) -> Tuple[int, ...]:
         """Config -> per-axis index vector (raises if off the axes)."""
@@ -201,13 +216,19 @@ class SearchSpace:
             raise ValueError(
                 f"{fc.describe()}: config sets n_devices but this space "
                 f"has no devices axis")
-        vals = (fc.mix, fc.n_segments, fc.chunk_pages, fc.parity,
-                fc.wear_aware, fc.spec, fc.n_devices)[: len(self.axes)]
-        return tuple(axis.index(v) for axis, v in zip(self.axes, vals))
+        if (fc.alloc_policy != "traditional"
+                and self.policies == ("traditional",)):
+            raise ValueError(
+                f"{fc.describe()}: config sets alloc_policy "
+                f"{fc.alloc_policy!r} but this space has no policies "
+                f"axis")
+        return tuple(axis.index(getattr(fc, f))
+                     for axis, f in self._axes_fields)
 
     def grid(self) -> List[FleetConfig]:
         """Full cross product, axis-major order."""
-        return [FleetConfig(*vals)
+        fields = [f for _, f in self._axes_fields]
+        return [FleetConfig(**dict(zip(fields, vals)))
                 for vals in itertools.product(*self.axes)]
 
     def sample_genes(self, rng: pyrandom.Random) -> Tuple[int, ...]:
@@ -221,12 +242,13 @@ def grid_space(*, mixes: Sequence[str] = tuple(MIXES),
                parities: Sequence[bool] = (False, True),
                wear: Sequence[bool] = (True, False),
                specs: Sequence = (SUPERBLOCK,),
-               devices: Sequence[int] = (0,)
+               devices: Sequence[int] = (0,),
+               policies: Sequence[str] = ("traditional",)
                ) -> List[FleetConfig]:
     """Full cross product (defaults: 2*2*2*2*2 = 32 configs on zn540)."""
     return SearchSpace(tuple(mixes), tuple(segments), tuple(chunks),
                        tuple(parities), tuple(wear), tuple(specs),
-                       tuple(devices)).grid()
+                       tuple(devices), tuple(policies)).grid()
 
 
 def random_space(seed: int, n: int, *,
@@ -236,13 +258,14 @@ def random_space(seed: int, n: int, *,
                  parities: Sequence[bool] = (False, True),
                  wear: Sequence[bool] = (True, False),
                  specs: Sequence = (SUPERBLOCK,),
-                 devices: Sequence[int] = (0,)
+                 devices: Sequence[int] = (0,),
+                 policies: Sequence[str] = ("traditional",)
                  ) -> List[FleetConfig]:
     """``n`` distinct configs sampled without replacement from the grid
     by a seeded PRNG -- deterministic under a fixed seed (tested)."""
     grid = grid_space(mixes=mixes, segments=segments, chunks=chunks,
                       parities=parities, wear=wear, specs=specs,
-                      devices=devices)
+                      devices=devices, policies=policies)
     rng = np.random.default_rng(seed)
     idx = rng.choice(len(grid), size=min(n, len(grid)), replace=False)
     return [grid[i] for i in idx]
@@ -320,7 +343,8 @@ def build_fleet_batch(eng: ZoneEngine, configs: Sequence[FleetConfig],
             parity_tenant=N_TENANTS)
         dyns += [eng.dyn(spec=specs_mix[d % len(specs_mix)],
                          zone_pages=member_zp,
-                         wear_aware=fc.wear_aware)
+                         wear_aware=fc.wear_aware,
+                         alloc_policy=fc.alloc_policy)
                  for d in range(nd)]
         # inert pad lanes square up a mixed-member-count batch
         lane_programs += [np.zeros((0, 5), dtype=np.int32)] * (nd_max - nd)
@@ -432,6 +456,7 @@ class Evaluator:
                 "wear_aware": float(fc.wear_aware),
                 "spec": "+".join(s.name for s in specs_mix),
                 "n_devices": float(nd),
+                "alloc_policy": fc.alloc_policy,
                 "fidelity": float(fidelity),
             }
             row.update(runner.config_report(res, self.eng, lanes))
@@ -518,7 +543,12 @@ def run_configs_legacy(flash: FlashGeometry, spec: ElementSpec,
     and is superseded per config), so this doubles as a semantic
     cross-check: array DLWA must match the batched engine path exactly
     (tested, and asserted by ``tools/bench.py``) -- including
-    mixed-spec batches through a union config.
+    mixed-spec batches through a union config.  ``alloc_policy =
+    "silent"`` configs replay here too: which blocks a zone claims
+    never changes which pages FINISH pads (pads depend only on the
+    write pointer and the spec's stripe map), so silent lanes are
+    DLWA-identical to the legacy device at the same spec (wear totals
+    are where the policies diverge, and those are not replayed).
 
     With ``fleet_timing`` the replay also collects the page-granular IO
     traces and runs :func:`repro.core.timing.run_fleet_trace` per

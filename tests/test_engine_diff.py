@@ -264,6 +264,33 @@ def test_shim_trace_streams_match_legacy():
             assert np.array_equal(f1.channels, f2.channels)
 
 
+def test_headline_dlwa_matches_legacy_oracle():
+    """The paper-headline DLWA figure (paired traditional/silent lanes
+    over one union engine, ONE batched dispatch) must agree per
+    occupancy point with per-op ``LegacyZNSDevice`` oracles: the
+    traditional lane with a legacy device built on the whole-zone
+    hchunk spec, the silent lane with a legacy BLOCK device (page
+    accounting is policy-independent; see
+    ``tests/test_silentzns_property.py``)."""
+    from repro.core import headline
+
+    flash = tiny_flash()
+    zone = ZoneGeometry(parallelism=4, n_segments=2)
+    eng = headline.build_headline_engine(flash, zone, max_active=3)
+    occs = (0.1, 0.5, 0.9)
+    fig = headline.dlwa_figure(eng, occs, n_zones=2)
+    oracle_specs = {"traditional_dlwa": headline.traditional_spec(zone),
+                    "silent_dlwa": BLOCK}
+    for key, spec in oracle_specs.items():
+        for i, occ in enumerate(occs):
+            leg = LegacyZNSDevice(flash, zone, spec, max_active=3)
+            ref = workloads.dlwa_benchmark(leg, occupancy=occ, n_zones=2)
+            assert fig[key][i] == ref["dlwa"], (key, occ)
+    # the gated reduction is exactly the 10%-point pairing of the two
+    r = headline.dlwa_reduction_at(fig, 0.1)
+    assert r == 1.0 - fig["silent_dlwa"][0] / fig["traditional_dlwa"][0]
+
+
 # --------------------------------------------------------------------- #
 # 3. vmapped sweep == per-program scans
 # --------------------------------------------------------------------- #
@@ -326,6 +353,37 @@ def test_make_dyn_rejects_fixed_capacity_shrink():
     blk = E.ZoneEngine(flash, ZoneGeometry(4, 2), BLOCK, max_active=3)
     assert int(blk.dyn(zone_pages=blk.cfg.zone_pages // 2).zone_pages) \
         == blk.cfg.zone_pages // 2
+
+
+def test_make_dyn_rejects_bad_alloc_policy():
+    """The alloc_policy axis must validate eagerly, naming the field:
+    an unknown policy string/int used to be conceivable as a silently
+    traced garbage branch selector; and FIXED lanes have no block
+    collection to vary, so 'silent' on FIXED is a construction-time
+    error, not a runtime misallocation."""
+    flash = tiny_flash()
+    eng = E.ZoneEngine(flash, ZoneGeometry(4, 2), BLOCK, max_active=3)
+    for bad in ("silentzns", "SILENT", ""):
+        with pytest.raises(ValueError, match="alloc_policy"):
+            E.make_dyn(eng.cfg, alloc_policy=bad)
+        with pytest.raises(ValueError, match="alloc_policy"):
+            eng.dyn(alloc_policy=bad)
+    with pytest.raises(ValueError, match="alloc_policy"):
+        eng.dyn(alloc_policy=7)
+    fixed = E.ZoneEngine(flash, ZoneGeometry(4, 2), FIXED, max_active=3)
+    with pytest.raises(ValueError, match="alloc_policy"):
+        fixed.dyn(alloc_policy="silent")
+    with pytest.raises(ValueError, match="wear_bound"):
+        eng.dyn(wear_bound=-1)
+    # the documented surface still passes: names, ints, and the default
+    assert int(eng.dyn(alloc_policy="silent").alloc_policy) \
+        == E.POLICY_SILENT
+    assert int(eng.dyn(alloc_policy=E.POLICY_SILENT).alloc_policy) \
+        == E.POLICY_SILENT
+    assert int(eng.dyn().alloc_policy) == E.POLICY_TRADITIONAL
+    assert int(fixed.dyn(alloc_policy="traditional").alloc_policy) \
+        == E.POLICY_TRADITIONAL
+    assert int(eng.dyn(wear_bound=2).wear_bound) == 2
 
 
 # --------------------------------------------------------------------- #

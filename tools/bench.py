@@ -37,12 +37,20 @@ Two tracked trajectories, each written as a JSON artifact:
   rebuild-storm subsection asserted recompile-stable across repeated
   same-shape dispatches.
 
+* ``BENCH_paper.json`` -- the paper's three headline claims as
+  SilentZNS-policy vs traditional-mapping lane pairs over one shared
+  union engine (``repro.core.headline.paper_report``; PR 8's gates:
+  DLWA reduction at 10% occupancy >= 80%, wear reduction > 0,
+  workload execution speedup > 1x, zero jit-cache growth across
+  repeated same-shape dispatches -- see ``check_paper_gates``).
+
 Both speedup comparisons assert metric agreement between the paths
 before timing anything.  Usage::
 
     PYTHONPATH=src python tools/bench.py [--quick] [--repeats 3]
         [--out BENCH_zoneengine.json] [--fleet-out BENCH_fleet.json]
-        [--skip-engine | --skip-fleet]
+        [--paper-out BENCH_paper.json]
+        [--skip-engine] [--skip-fleet] [--skip-paper]
 """
 
 from __future__ import annotations
@@ -70,8 +78,9 @@ from repro.fleet.search import fleet_vs_legacy_speedup  # noqa: E402
 
 # bump when the artifact layout changes in a way bench_table must
 # know about (2: run provenance stamped in meta; obs_overhead section;
-# 3: array section + scaled legacy fleet timing)
-SCHEMA_VERSION = 3
+# 3: array section + scaled legacy fleet timing; 4: BENCH_paper.json
+# headline artifact)
+SCHEMA_VERSION = 4
 
 
 def _git_sha() -> str:
@@ -414,6 +423,71 @@ def bench_fleet(args) -> int:
     return rc
 
 
+# the paper's summary claims, as floors the artifact must clear
+PAPER_DLWA_REDUCTION_FLOOR = 0.80   # paper: 92% at 10% occupancy
+PAPER_WEAR_REDUCTION_FLOOR = 0.0    # paper: up to 12% less wear
+PAPER_EXEC_SPEEDUP_FLOOR = 1.0      # paper: up to 3.7x faster
+
+
+def check_paper_gates(artifact: dict) -> int:
+    """PR 8's acceptance bars over a ``BENCH_paper.json`` artifact.
+
+    Pure function of the artifact dict (no benchmarking) so the gate
+    logic is unit-testable: returns 0 when every gate passes, 1
+    otherwise, printing one stderr WARNING per failed gate."""
+    rc = 0
+    dlwa = artifact["dlwa"]["reduction_at_10pct"]
+    if dlwa < PAPER_DLWA_REDUCTION_FLOOR:
+        print(f"WARNING: DLWA reduction at 10% occupancy {dlwa:.1%} "
+              f"below the {PAPER_DLWA_REDUCTION_FLOOR:.0%} floor",
+              file=sys.stderr)
+        rc = 1
+    wear = artifact["wear"]["wear_reduction"]
+    if wear <= PAPER_WEAR_REDUCTION_FLOOR:
+        print(f"WARNING: silent policy saved no wear "
+              f"(wear reduction {wear:.1%})", file=sys.stderr)
+        rc = 1
+    speedup = artifact["exec"]["speedup"]
+    if speedup <= PAPER_EXEC_SPEEDUP_FLOOR:
+        print(f"WARNING: workload execution speedup {speedup:.2f}x "
+              f"not above the 1x floor", file=sys.stderr)
+        rc = 1
+    if artifact["recompiles"]["delta_total"] != 0:
+        print("WARNING: paper figures recompiled on a repeated "
+              "same-shape dispatch", file=sys.stderr)
+        rc = 1
+    return rc
+
+
+def bench_paper(args) -> int:
+    from repro.core import headline
+
+    occs = ((0.1, 0.3, 0.7) if args.quick
+            else headline.DEFAULT_OCCUPANCIES)
+    report = headline.paper_report(
+        occupancies=occs,
+        wear_zones=4 if args.quick else 8,
+        wear_cycles=4 if args.quick else 8,
+        exec_cycles=2 if args.quick else 4)
+    report["meta"] = _meta(quick=bool(args.quick),
+                           occupancies=len(occs))
+    args.paper_out.write_text(json.dumps(report, indent=2) + "\n")
+
+    d, w, x = report["dlwa"], report["wear"], report["exec"]
+    print(f"paper/dlwa: reduction at 10% occupancy "
+          f"{d['reduction_at_10pct']:.1%} "
+          f"({d['traditional_dlwa'][0]:.2f} -> {d['silent_dlwa'][0]:.2f};"
+          f" paper claims 92%)")
+    print(f"paper/wear: {w['traditional_erases']:.0f} -> "
+          f"{w['silent_erases']:.0f} block erases "
+          f"(-{w['wear_reduction']:.1%})")
+    print(f"paper/exec: {x['traditional_s']:.2f}s -> {x['silent_s']:.2f}s "
+          f"({x['speedup']:.2f}x); recompiles on repeat "
+          f"{report['recompiles']['delta_total']:.0f}")
+    print(f"wrote {args.paper_out}")
+    return check_paper_gates(report)
+
+
 def main() -> int:
     # allow_abbrev off: a mistyped/abbreviated flag (e.g. `--skip`)
     # must exit non-zero instead of silently running everything under
@@ -423,21 +497,26 @@ def main() -> int:
                     default=_ROOT / "BENCH_zoneengine.json")
     ap.add_argument("--fleet-out", type=pathlib.Path,
                     default=_ROOT / "BENCH_fleet.json")
+    ap.add_argument("--paper-out", type=pathlib.Path,
+                    default=_ROOT / "BENCH_paper.json")
     ap.add_argument("--repeats", type=int, default=3)
     ap.add_argument("--quick", action="store_true",
                     help="smaller sweeps (CI smoke)")
     ap.add_argument("--skip-engine", action="store_true")
     ap.add_argument("--skip-fleet", action="store_true")
+    ap.add_argument("--skip-paper", action="store_true")
     args = ap.parse_args()
-    if args.skip_engine and args.skip_fleet:
-        ap.error("--skip-engine and --skip-fleet together leave "
-                 "nothing to benchmark")
+    if args.skip_engine and args.skip_fleet and args.skip_paper:
+        ap.error("--skip-engine, --skip-fleet and --skip-paper together "
+                 "leave nothing to benchmark")
 
     rc = 0
     if not args.skip_engine:
         rc |= bench_engine(args)
     if not args.skip_fleet:
         rc |= bench_fleet(args)
+    if not args.skip_paper:
+        rc |= bench_paper(args)
     return rc
 
 
