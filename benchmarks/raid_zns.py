@@ -23,8 +23,10 @@ Modes (same ``name,us_per_call,derived`` CSV schema as
 
   fills superzones through ``ZoneFS``, FINISHes them, simulates the
   whole fleet in one vmapped scan, and prints per-device DLWA/wear plus
-  the fleet makespan.  (Always object-based: ZoneFS drives the
-  ``ZoneBackend`` surface interactively.)
+  the fleet makespan.  ZoneFS mounts ``ArrayEngine`` (the compiler
+  path: per-op commands validate eagerly, execute as ONE batched
+  dispatch); ``--legacy`` mounts the per-op object ``ZNSArray``
+  oracle.
 
 * rebuild-after-failure::
 
@@ -141,12 +143,20 @@ class TracingArray(ZNSArray):
 def fleet_run(args: argparse.Namespace) -> Dict:
     """End-to-end: KV-style ZoneFS traffic over the array, then fleet
     timing of that same traffic; prints per-device DLWA/wear and the
-    fleet makespan."""
+    fleet makespan.
+
+    Engine-native by default: ZoneFS mounts :class:`ArrayEngine`
+    directly (the compiler path -- commands validate against the
+    superzone mirror and accumulate as member op programs), then ONE
+    batched dispatch executes the whole mount and one op-granular
+    timing dispatch scores it.  ``--legacy`` mounts the per-op object
+    ``ZNSArray`` (the test oracle) and times its recorded IO traces."""
     spec = SPECS[args.spec]
     flash, zone = zn540()
-    arr = TracingArray.build(flash, zone, spec, n_devices=args.devices,
-                             chunk_pages=args.chunk_pages,
-                             parity=args.parity, max_active=14)
+    cls = TracingArray if args.legacy else ArrayEngine
+    arr = cls.build(flash, zone, spec, n_devices=args.devices,
+                    chunk_pages=args.chunk_pages,
+                    parity=args.parity, max_active=14)
     fs = ZoneFS(arr, finish_threshold=args.finish_threshold)
     # rotating create/delete traffic: files of ~1/3 superzone, lifetimes
     # cycling so zones mix and FINISH/RESET both fire
@@ -162,14 +172,20 @@ def fleet_run(args: argparse.Namespace) -> Dict:
         if info.state.name == "OPEN":
             fs.dev.zone_finish(z)
 
-    fleet = timing.run_fleet_trace(
-        arr.flash, timing.group_tagged(arr.tagged, args.devices))
+    if args.legacy:
+        fleet = timing.run_fleet_trace(
+            arr.flash, timing.group_tagged(arr.tagged, args.devices))
+        makespan = fleet["fleet_makespan_s"]
+    else:
+        arr.run(pad_quantum=256)
+        makespan = arr.fleet_timing()["fleet_makespan_s"]
 
     rep = arr.report()
     rep.update(fs.report())
-    rep["fleet_makespan_s"] = fleet["fleet_makespan_s"]
+    rep["fleet_makespan_s"] = makespan
     print(f"# array {arr.geom.describe()} spec={args.spec} "
-          f"finish_threshold={args.finish_threshold}")
+          f"finish_threshold={args.finish_threshold} "
+          f"({'legacy object array' if args.legacy else 'engine'})")
     print("device,dlwa,host_pages,dummy_pages,total_block_erases,"
           "max_wear,cv_wear,failed")
     for r in arr.device_reports():

@@ -93,6 +93,22 @@ class ZoneBackend(Protocol):
         ...
 
 
+def set_stream_class(dev: Any, name: str) -> None:
+    """Announce the traffic class of the next commands to ``dev``.
+
+    Host front-ends (the LSM simulator's WAL/flush/compaction writers,
+    the checkpoint manager's ckpt/log streams, the flash cache's
+    admission/hit paths) call this before issuing zone commands.  A
+    backend that understands stream classes (the trace recorder in
+    :mod:`repro.storage.compile`, which maps classes to tenant tags)
+    implements ``set_stream_class``; every other backend ignores the
+    announcement -- the call is a no-op on devices without the hook, so
+    front-ends stay backend-agnostic."""
+    hook = getattr(dev, "set_stream_class", None)
+    if hook is not None and hook is not set_stream_class:
+        hook(name)
+
+
 def check_backend(obj: Any) -> None:
     """Raise ``TypeError`` if ``obj`` is missing part of the surface."""
     missing = [name for name in

@@ -31,7 +31,7 @@ evolve-vs-random dispatches-to-target comparison to
 
 from repro.fleet.evolve import (EvolveParams, EvolveResult, evolve,
                                 evolve_vs_random)
-from repro.fleet.runner import (FleetResult, config_report,
+from repro.fleet.runner import (FleetResult, assert_all_ok, config_report,
                                 dispatch_cost, real_op_count, run_fleet)
 from repro.fleet.search import (MIXES, N_TENANTS, OBJECTIVE_KEYS,
                                 Evaluator, FleetConfig, SearchSpace,
@@ -43,8 +43,8 @@ from repro.fleet.tenants import (TENANT_COL, interleave_tenants,
 
 __all__ = [
     "EvolveParams", "EvolveResult", "evolve", "evolve_vs_random",
-    "FleetResult", "config_report", "dispatch_cost", "real_op_count",
-    "run_fleet",
+    "FleetResult", "assert_all_ok", "config_report", "dispatch_cost",
+    "real_op_count", "run_fleet",
     "MIXES", "N_TENANTS", "OBJECTIVE_KEYS", "Evaluator", "FleetConfig",
     "SearchSpace", "build_fleet_batch", "evaluate_configs", "grid_space",
     "pareto_front", "random_space", "run_configs_legacy", "score_rows",

@@ -46,7 +46,8 @@ class FleetResult:
     host_delta: np.ndarray   # (L, n_ops) host pages moved by each op
     dummy_delta: np.ndarray  # (L, n_ops) dummy (FINISH-pad) pages
     erase_delta: np.ndarray  # (L, n_ops) block erasures
-    pages: np.ndarray        # (L, n_ops) pages the op physically wrote
+    pages: np.ndarray        # (L, n_ops) pages the op physically moved
+                             #   (writes + FINISH padding + READ xfers)
     completions: np.ndarray  # (L, n_ops) op completion time (s)
     latencies: np.ndarray    # (L, n_ops) closed-loop op latency (s)
     makespans: np.ndarray    # (L,) lane makespan (s)
@@ -103,6 +104,53 @@ class FleetResult:
             out[k] = float(np.percentile(lat[sel], 99)) if sel.any() else 0.0
         return out
 
+    def tenant_class_report(self, lanes: Optional[np.ndarray] = None,
+                            names: Optional[List[str]] = None
+                            ) -> Dict[str, Dict[str, float]]:
+        """Per-tenant-class latency predictability over ``lanes`` (all
+        lanes by default).
+
+        When the tenant column carries *traffic classes* (the trace
+        compiler's class-tagged dispatches: wal/flush/compact,
+        ckpt/log, admit/hit), this is the paper-style per-stream
+        rollup: op and page counts, closed-loop latency p50/p99/max,
+        and ``p99_over_p50`` -- the predictability ratio a
+        well-isolated class keeps near 1.  ``names`` labels classes in
+        tag order; unnamed tags keep their number."""
+        lanes = (np.arange(len(self.programs)) if lanes is None
+                 else np.asarray(lanes))
+        t = self.tenants[lanes].reshape(-1)
+        lat = self.latencies[lanes].reshape(-1)
+        pages = self.pages[lanes].reshape(-1)
+        host = self.host_delta[lanes].reshape(-1)
+        act = (self.programs[lanes][:, :, 0].reshape(-1) != zengine.OP_NOP
+               ) & self.ok[lanes].reshape(-1)
+        out: Dict[str, Dict[str, float]] = {}
+        for k in range(self.n_tenants):
+            name = (names[k] if names is not None and k < len(names)
+                    else str(k))
+            sel = act & (t == k)
+            if not sel.any():
+                out[name] = {"ops": 0.0, "pages": 0.0, "host_pages": 0.0,
+                             "mean_latency_s": 0.0, "p50_latency_s": 0.0,
+                             "p99_latency_s": 0.0, "max_latency_s": 0.0,
+                             "p99_over_p50": 0.0}
+                continue
+            l_k = lat[sel]
+            p50 = float(np.percentile(l_k, 50))
+            p99 = float(np.percentile(l_k, 99))
+            out[name] = {
+                "ops": float(sel.sum()),
+                "pages": float(pages[sel].sum()),
+                "host_pages": float(host[sel].sum()),
+                "mean_latency_s": float(l_k.mean()),
+                "p50_latency_s": p50,
+                "p99_latency_s": p99,
+                "max_latency_s": float(l_k.max()),
+                "p99_over_p50": p99 / p50 if p50 > 0 else 0.0,
+            }
+        return out
+
 
 def run_fleet(eng: ZoneEngine, programs: np.ndarray, *,
               dyn: Optional[DynConfig] = None, n_tenants: int = 1,
@@ -153,11 +201,18 @@ def run_fleet(eng: ZoneEngine, programs: np.ndarray, *,
         wp_a = np.asarray(trace.wp_after)
         dummy = np.asarray(trace.dummy_delta)
         op = programs[:, :, 0]
-        # pages the op physically programmed: write advance, plus FINISH
-        # padding (RESET rewinds wp without moving pages -> clip)
-        pages = np.maximum(wp_a - wp_b, 0) + np.where(
-            op == zengine.OP_FINISH, dummy, 0)
-        t_page = np.float32(eng.flash.t_prog + eng.flash.t_xfer)
+        # pages the op physically moved: write advance, FINISH padding
+        # (RESET rewinds wp without moving pages -> clip), READ
+        # transfers (the n_pages column; reads never advance wp)
+        pages = (np.maximum(wp_a - wp_b, 0)
+                 + np.where(op == zengine.OP_FINISH, dummy, 0)
+                 + np.where(op == zengine.OP_READ, programs[:, :, 2], 0))
+        # per-op page service time: reads pay t_read, everything
+        # page-moving else programs flash
+        t_page = np.where(
+            op == zengine.OP_READ,
+            np.float32(eng.flash.t_read + eng.flash.t_xfer),
+            np.float32(eng.flash.t_prog + eng.flash.t_xfer))
         completions, latencies, makespans = timing.simulate_fleet_ops(
             np.asarray(trace.cols), pages.astype(np.int32),
             programs[:, :, TENANT_COL], t_page,

@@ -5,10 +5,33 @@ framework's checkpoint manager) place files with lifetime hints onto zones,
 decide when to FINISH (threshold policy), and garbage-collect zones whose
 data is fully invalidated.  The SA <-> DLWA trade-off of paper Fig. 1/7b
 lives here.
+
+Three newer members lower this host traffic onto the batched engine:
+:mod:`repro.storage.traffic` (Zipfian/diurnal/burst request streams),
+:mod:`repro.storage.flashcache` (zone-granular flash cache), and
+:mod:`repro.storage.compile` (the trace -> op-program compiler: record
+any ZoneBackend consumer, replay it as ONE fleet dispatch).
 """
 
-from repro.storage.zonefs import ZoneFS, FSStats
+from repro.storage.compile import (CheckpointSchedule, RecordingBackend,
+                                   WORKLOADS, lane_metrics, lane_state,
+                                   record_cache, record_checkpoints,
+                                   record_lsm, replay_recorders,
+                                   run_workload, scaled_kv_config,
+                                   workload_programs)
+from repro.storage.flashcache import CacheConfig, CacheStats, FlashCache
 from repro.storage.lsm import KVBenchConfig, LSMSimulator, kvbench_mix
+from repro.storage.traffic import (burst_arrivals, diurnal_load,
+                                   zipf_weights, zipfian_keys,
+                                   zipfian_tenants)
+from repro.storage.zonefs import ZoneFS, FSStats
 
 __all__ = ["ZoneFS", "FSStats", "KVBenchConfig", "LSMSimulator",
-           "kvbench_mix"]
+           "kvbench_mix",
+           "CacheConfig", "CacheStats", "FlashCache",
+           "burst_arrivals", "diurnal_load", "zipf_weights",
+           "zipfian_keys", "zipfian_tenants",
+           "CheckpointSchedule", "RecordingBackend", "WORKLOADS",
+           "lane_metrics", "lane_state", "record_cache",
+           "record_checkpoints", "record_lsm", "replay_recorders",
+           "run_workload", "scaled_kv_config", "workload_programs"]

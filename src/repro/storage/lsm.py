@@ -28,6 +28,7 @@ from typing import Callable, Deque, Dict, List, Optional
 
 import numpy as np
 
+from repro.core.backend import set_stream_class
 from repro.storage.zonefs import ZoneFS
 
 
@@ -123,6 +124,7 @@ class LSMSimulator:
 
     def _step(self, job: _Job) -> bool:
         fid, lifetime, pages, _ = job.outputs[job.out_idx]
+        set_stream_class(self.fs.dev, job.kind)
         if job.written_in_cur == 0:
             self.fs.begin(fid, lifetime, expected_pages=pages)
         room = pages - job.written_in_cur
@@ -181,6 +183,7 @@ class LSMSimulator:
         return rep
 
     def _wal_append(self, entries: int) -> bool:
+        set_stream_class(self.fs.dev, "wal")
         if self._wal_fid is None:
             self._wal_fid = self._fid()
             self._epoch_wals.append(self._wal_fid)

@@ -35,7 +35,7 @@ import ml_dtypes
 import numpy as np
 
 from repro.core import SUPERBLOCK, ZNSDevice, zn540
-from repro.core.backend import ZoneBackend
+from repro.core.backend import ZoneBackend, set_stream_class
 from repro.core.elements import ElementSpec
 from repro.storage.zonefs import ZoneFS
 
@@ -75,6 +75,8 @@ class ZNSTelemetry:
         self.file_ids: Dict[str, int] = {}
 
     def write_file(self, name: str, nbytes: int, lifetime: int) -> None:
+        set_stream_class(self.dev,
+                         "ckpt" if lifetime == LIFETIME_CKPT else "log")
         self._next_file += 1
         pages = max(1, nbytes // self.dev.flash.page_bytes)
         self.fs.create(self._next_file, pages, lifetime)

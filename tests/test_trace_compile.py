@@ -1,0 +1,417 @@
+"""Differential tests for the trace -> op-program compiler.
+
+The property: application traffic (fuzzed KVBench mixes, checkpoint
+schedules, flash-cache streams) driven through ``ZoneFS`` / the cache
+mounted on a :class:`repro.storage.RecordingBackend`, compiled to a
+width-5 op program and replayed through the batched ``ZoneEngine``,
+leaves *bit-identical* device state to the same traffic driven through
+the legacy per-op ``LegacyZNSDevice`` path -- DLWA, wear, counters and
+zone tables, across all 5 element specs and both allocation policies.
+(The legacy oracle has no silent allocator, so silent lanes are
+cross-checked on everything the policy is defined to preserve:
+host/dummy pages, DLWA, erases, active count, and the zone tables;
+traditional lanes must match the element-level wear state too.)
+
+Plus: the recorder's control-plane mirror raises the device shim's
+exact errors, the mountable ``for_engine`` recorder reports through
+``ZoneFS.report()`` like the legacy mount, multi-lane replays equal
+per-lane runs, and the workload tenant mixes registered in
+``repro.fleet.search.MIXES`` build legal deterministic fleet batches.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.storage as S
+from repro.core import engine as E
+from repro.core.device import ZNSDevice
+from repro.core.device_legacy import LegacyZNSDevice
+from repro.core.elements import BLOCK, FIXED, SUPERBLOCK, hchunk, vchunk
+from repro.core.engine import ZoneEngine
+from repro.core.geometry import FlashGeometry, ZoneGeometry
+from repro.storage.compile import _lsm_jobs
+
+SPECS = [BLOCK, vchunk(2), hchunk(2), SUPERBLOCK, FIXED]
+#: FIXED has no block collection to commit on the fly
+POLICIES = {True: ("traditional",), False: ("traditional", "silent")}
+
+MAX_ACTIVE = 6
+
+
+def mid_flash():
+    # 8 zones of 32 pages: enough for the LSM mount's session churn
+    return FlashGeometry(n_channels=4, ways_per_channel=1,
+                         blocks_per_lun=16, pages_per_block=4,
+                         page_bytes=4096)
+
+
+def make_engine(spec):
+    return ZoneEngine(mid_flash(), ZoneGeometry(parallelism=4,
+                                                n_segments=2),
+                      spec, max_active=MAX_ACTIVE)
+
+
+def record_and_legacy(spec, drive):
+    """Drive identical traffic through a recorder and the legacy
+    device; return (eng, recorder, legacy)."""
+    eng = make_engine(spec)
+    rec = S.RecordingBackend(eng.flash, zone_pages=eng.cfg.zone_pages,
+                             n_zones=eng.cfg.n_zones,
+                             max_active=MAX_ACTIVE)
+    leg = LegacyZNSDevice(eng.flash, eng.zone_geom, spec,
+                          max_active=MAX_ACTIVE)
+    drive(rec)
+    drive(leg)
+    return eng, rec, leg
+
+
+def assert_replay_matches_legacy(eng, rec, leg, policy, ctx=""):
+    """Replay the compiled program and compare against the legacy
+    device -- fully bit-identical under ``traditional``, and on every
+    policy-invariant quantity under ``silent``."""
+    state, trace = eng.run(eng.init_state(), rec.program(),
+                           eng.dyn(alloc_policy=policy))
+    ok = np.asarray(trace.ok)
+    assert ok.all(), f"illegal replayed op {ctx}"
+    assert int(state.host_pages) == leg.host_pages, f"host {ctx}"
+    assert int(state.dummy_pages) == leg.dummy_pages, f"dummy {ctx}"
+    assert int(state.block_erases) == leg.block_erases, f"erases {ctx}"
+    assert int(state.n_active) == leg.n_active, f"n_active {ctx}"
+    m = eng.metrics(state)
+    assert m["dlwa"] == pytest.approx(leg.dlwa, abs=1e-12), f"dlwa {ctx}"
+    zs = np.asarray(state.zone_state)
+    wp = np.asarray(state.zone_wp)
+    hwp = np.asarray(state.zone_host_wp)
+    for z in range(eng.cfg.n_zones):
+        info = leg.zones[z]
+        assert zs[z] == info.state.value, f"zone {z} state {ctx}"
+        assert wp[z] == info.wp and hwp[z] == info.host_wp, \
+            f"zone {z} wp {ctx}"
+    # the recorder's own control-plane mirror agrees with both
+    assert rec.host_pages == leg.host_pages, f"recorder host {ctx}"
+    assert rec.n_active == leg.n_active, f"recorder n_active {ctx}"
+    for z in range(rec.n_zones):
+        a, b = rec.zones[z], leg.zones[z]
+        assert (a.state.name, a.wp, a.host_wp) == \
+            (b.state.name, b.wp, b.host_wp), f"recorder zone {z} {ctx}"
+    if policy == "traditional":
+        n = eng.cfg.n_elements
+        assert np.array_equal(np.asarray(state.elem_wear[:n]),
+                              leg.elem_wear), f"wear {ctx}"
+        assert np.array_equal(np.asarray(state.elem_avail[:n]),
+                              leg.elem_avail), f"avail {ctx}"
+        assert np.array_equal(np.asarray(state.elem_pages[:n]),
+                              leg.elem_pages), f"elem pages {ctx}"
+        assert np.array_equal(np.asarray(state.elem_zone[:n]),
+                              leg.elem_zone), f"elem map {ctx}"
+        assert np.array_equal(eng.block_wear(state), leg.block_wear()), \
+            f"block wear {ctx}"
+    return state
+
+
+# --------------------------------------------------------------------- #
+# 1. fuzzed KVBench mixes (the paper's evaluation traffic)
+# --------------------------------------------------------------------- #
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(0, len(SPECS) - 1))
+def test_lsm_compiled_matches_legacy(seed, spec_i):
+    spec = SPECS[spec_i]
+
+    def drive(dev):
+        cfg = S.scaled_kv_config(dev.zone_pages, dev.flash.page_bytes,
+                                 seed=seed, n_flushes=4 + seed % 5,
+                                 max_jobs=_lsm_jobs(dev))
+        sim = S.LSMSimulator(S.ZoneFS(dev), cfg)
+        sim.run()
+        assert not sim.failed
+
+    eng, rec, leg = record_and_legacy(spec, drive)
+    assert len(rec) > 0
+    for policy in POLICIES[spec.kind.name == "FIXED"]:
+        assert_replay_matches_legacy(
+            eng, rec, leg, policy,
+            f"lsm seed={seed} spec={spec.name} policy={policy}")
+
+
+# --------------------------------------------------------------------- #
+# 2. fuzzed checkpoint-burst schedules
+# --------------------------------------------------------------------- #
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 10), st.integers(0, 3), st.integers(1, 3),
+       st.integers(0, 2**31 - 1), st.integers(0, len(SPECS) - 1))
+def test_checkpoints_compiled_match_legacy(n_steps, shards, keep, seed,
+                                           spec_i):
+    spec = SPECS[spec_i]
+    sched = S.CheckpointSchedule(n_steps=n_steps, shards=shards,
+                                 keep=keep, log_rate=2, seed=seed)
+
+    def drive(dev):
+        S.record_checkpoints(dev, sched)
+
+    eng, rec, leg = record_and_legacy(spec, drive)
+    for policy in POLICIES[spec.kind.name == "FIXED"]:
+        assert_replay_matches_legacy(
+            eng, rec, leg, policy,
+            f"ckpt steps={n_steps} shards={shards} keep={keep} "
+            f"seed={seed} spec={spec.name} policy={policy}")
+
+
+# --------------------------------------------------------------------- #
+# 3. flash-cache streams (reads + zone-granular eviction)
+# --------------------------------------------------------------------- #
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.floats(0.0, 1.5),
+       st.integers(0, len(SPECS) - 1))
+def test_cache_compiled_matches_legacy(seed, skew, spec_i):
+    spec = SPECS[spec_i]
+
+    def drive(dev):
+        S.record_cache(dev, n_accesses=200, n_keys=32, skew=skew,
+                       seed=seed, capacity_zones=5, obj_pages=4)
+
+    eng, rec, leg = record_and_legacy(spec, drive)
+    prog = rec.program()
+    assert (prog[:, 0] == E.OP_READ).any(), "cache hits must record reads"
+    for policy in POLICIES[spec.kind.name == "FIXED"]:
+        assert_replay_matches_legacy(
+            eng, rec, leg, policy,
+            f"cache seed={seed} skew={skew:.3f} spec={spec.name} "
+            f"policy={policy}")
+
+
+# --------------------------------------------------------------------- #
+# 4. the recorder's control-plane mirror
+# --------------------------------------------------------------------- #
+def _mirror_pair(spec=SUPERBLOCK, max_active=2):
+    flash = mid_flash()
+    zone = ZoneGeometry(parallelism=4, n_segments=2)
+    dev = ZNSDevice(flash, zone, spec, max_active=max_active)
+    rec = S.RecordingBackend(flash, zone_pages=dev.zone_pages,
+                             n_zones=dev.n_zones, max_active=max_active)
+    return dev, rec
+
+
+@pytest.mark.parametrize("bad", ["full", "overflow", "limit", "read"])
+def test_recorder_raises_device_errors(bad):
+    dev, rec = _mirror_pair()
+    for d in (dev, rec):
+        if bad == "full":
+            d.zone_write(0, d.zone_pages)      # auto-seals
+            with pytest.raises(RuntimeError, match="write to FULL zone 0"):
+                d.zone_write(0, 1)
+        elif bad == "overflow":
+            d.zone_write(0, 1)
+            with pytest.raises(RuntimeError, match="overflow"):
+                d.zone_write(0, d.zone_pages)
+        elif bad == "limit":
+            d.zone_write(0, 1)
+            d.zone_write(1, 1)
+            with pytest.raises(RuntimeError,
+                               match=r"open/active zone limit \(2\)"):
+                d.zone_write(2, 1)
+        else:
+            with pytest.raises(RuntimeError,
+                               match="read from unmapped zone 3"):
+                d.zone_read(3, np.arange(2))
+
+
+def test_recorder_random_ops_mirror_device_shim():
+    """Random legal/illegal command soup: the recorder accepts exactly
+    what the engine-backed device shim accepts, with matching zone
+    tables afterwards."""
+    rng = np.random.default_rng(7)
+    dev, rec = _mirror_pair(max_active=3)
+    for i in range(200):
+        op = int(rng.integers(0, 4))
+        z = int(rng.integers(0, 4))
+        n = int(rng.integers(1, dev.zone_pages + 2))
+        outcomes = []
+        for d in (dev, rec):
+            try:
+                if op == 0:
+                    d.zone_write(z, n)
+                elif op == 1:
+                    d.zone_finish(z)
+                elif op == 2:
+                    d.zone_reset(z)
+                else:
+                    d.zone_read(z, np.arange(min(n, 2)))
+                outcomes.append("ok")
+            except RuntimeError as exc:
+                outcomes.append(f"err:{exc}")
+        assert outcomes[0] == outcomes[1], f"i={i} op={op} z={z} n={n}"
+        assert dev.n_active == rec.n_active
+        for zz in range(4):
+            a, b = dev.zones[zz], rec.zones[zz]
+            assert (a.state.name, a.wp) == (b.state.name, b.wp)
+
+
+def test_recorder_emits_explicit_alloc_rows():
+    _, rec = _mirror_pair()
+    rec.zone_write(1, 3)
+    prog = rec.program()
+    assert prog[0].tolist() == [E.OP_ALLOC, 1, 0, 0, 0]
+    assert prog[1].tolist() == [E.OP_WRITE, 1, 3, E.F_HOST, 0]
+
+
+def test_recorder_zone_base_offsets_rows():
+    flash = mid_flash()
+    rec = S.RecordingBackend(flash, zone_pages=32, n_zones=2,
+                             max_active=2, zone_base=5)
+    rec.zone_write(0, 4)
+    rec.zone_write(1, 4)
+    assert sorted(set(rec.program()[:, 1].tolist())) == [5, 6]
+
+
+def test_recorder_stream_classes_stamp_tenants():
+    flash = mid_flash()
+    rec = S.RecordingBackend(flash, zone_pages=32, n_zones=4,
+                             max_active=4,
+                             class_tenants={"wal": 0, "flush": 1})
+    rec.set_stream_class("wal")
+    rec.zone_write(0, 2)
+    rec.set_stream_class("flush")
+    rec.zone_write(1, 2)
+    rec.set_stream_class("unknown-class")   # must not disturb the tag
+    rec.zone_write(1, 2)
+    prog = rec.program()
+    writes = prog[prog[:, 0] == E.OP_WRITE]
+    assert writes[:, 4].tolist() == [0, 1, 1]
+
+
+# --------------------------------------------------------------------- #
+# 5. the mountable compiled device (for_engine) and batched replay
+# --------------------------------------------------------------------- #
+def test_for_engine_mount_reports_like_legacy():
+    eng = make_engine(SUPERBLOCK)
+    rec = S.RecordingBackend.for_engine(eng, max_active=MAX_ACTIVE)
+    leg = LegacyZNSDevice(eng.flash, eng.zone_geom, SUPERBLOCK,
+                          max_active=MAX_ACTIVE)
+    for dev in (rec, leg):
+        fs = S.ZoneFS(dev)
+        fs.create(1, 10, 0)
+        fs.create(2, 40, 1)
+        fs.delete(1)
+        rep = fs.report()
+        dev._rep = rep
+    assert rec._rep["dlwa"] == pytest.approx(leg._rep["dlwa"], abs=1e-12)
+    assert rec.dummy_pages == leg.dummy_pages
+    # cache invalidates on new traffic
+    before = rec.dummy_pages
+    S.ZoneFS(rec)  # re-mounting records nothing
+    rec.zone_write(rec.n_zones - 1, 1)
+    rec.zone_finish(rec.n_zones - 1)
+    assert rec.dummy_pages > before
+
+
+def test_replay_recorders_matches_individual_runs():
+    eng = make_engine((SUPERBLOCK, BLOCK))
+    recs = []
+    for t, spec in enumerate((SUPERBLOCK, BLOCK)):
+        rec = S.RecordingBackend(eng.flash, zone_pages=eng.cfg.zone_pages,
+                                 n_zones=4, max_active=3, tenant=t)
+        S.record_cache(rec, n_accesses=120, n_keys=24, seed=t,
+                       capacity_zones=4, obj_pages=4)
+        recs.append(rec)
+    dyns = [eng.dyn(spec=SUPERBLOCK), eng.dyn(spec=BLOCK)]
+    res = S.replay_recorders(eng, recs, dyns=dyns, n_tenants=2,
+                             pad_quantum=32)
+    assert res.programs.shape[0] == 2
+    assert res.programs.shape[1] % 32 == 0
+    for lane, (rec, dyn) in enumerate(zip(recs, dyns)):
+        solo_state, _ = eng.run(eng.init_state(), rec.program(), dyn)
+        got = S.lane_metrics(eng, res, lane)
+        want = eng.metrics(solo_state)
+        assert got == want, f"lane {lane}"
+
+
+def test_replay_recorders_checks_divergence():
+    eng = make_engine(SUPERBLOCK)
+    rec = S.RecordingBackend(eng.flash, zone_pages=eng.cfg.zone_pages,
+                             n_zones=4, max_active=3)
+    rec.zone_write(0, 4)
+    # corrupt a row: this write overflows the zone
+    rec._rows.append((E.OP_WRITE, 0, eng.cfg.zone_pages, E.F_HOST, 0))
+    with pytest.raises(AssertionError, match="illegal op"):
+        S.replay_recorders(eng, [rec], n_tenants=1)
+
+
+# --------------------------------------------------------------------- #
+# 6. workload mixes + class-tagged dispatch
+# --------------------------------------------------------------------- #
+def big_engine():
+    flash = FlashGeometry(n_channels=4, ways_per_channel=1,
+                          blocks_per_lun=32, pages_per_block=4,
+                          page_bytes=4096)
+    return ZoneEngine(flash, ZoneGeometry(parallelism=4, n_segments=2),
+                      SUPERBLOCK, max_active=8)
+
+
+def test_workload_mixes_registered():
+    from repro.fleet.search import MIXES
+    for name in S.WORKLOADS:
+        assert name in MIXES
+
+
+def test_workload_mix_deterministic_and_legal():
+    from repro.fleet.search import MIXES, N_TENANTS
+    eng = big_engine()
+    for name in S.WORKLOADS:
+        a = MIXES[name](eng, eng.cfg.zone_pages)
+        b = MIXES[name](eng, eng.cfg.zone_pages)
+        assert len(a) == N_TENANTS
+        for pa, pb in zip(a, b):
+            assert np.array_equal(pa, pb), name
+        # mutating a returned program must not poison the cache
+        a[0][:, 2] = -1
+        c = MIXES[name](eng, eng.cfg.zone_pages)
+        assert not np.array_equal(a[0], c[0]), name
+
+
+def test_workload_mix_builds_legal_fleet_batch():
+    from repro.fleet import (N_TENANTS, assert_all_ok, build_fleet_batch,
+                             run_fleet)
+    from repro.fleet.search import FleetConfig
+    eng = big_engine()
+    fc = FleetConfig(mix="cache", n_segments=2, chunk_pages=16,
+                     parity=False, wear_aware=True)
+    programs, dyn, merged = build_fleet_batch(eng, [fc], n_devices=2,
+                                              pad_quantum=64)
+    res = run_fleet(eng, programs, dyn=dyn, n_tenants=N_TENANTS)
+    assert_all_ok(res)
+    assert (merged[0][:, 0] == E.OP_READ).any()
+
+
+def test_run_workload_class_report():
+    eng = big_engine()
+    for name, classes in S.WORKLOADS.items():
+        res, rep = S.run_workload(eng, name, pad_quantum=32)
+        assert rep["workload"] == name
+        tc = rep["tenant_classes"]
+        assert tuple(tc) == classes
+        total_ops = sum(v["ops"] for v in tc.values())
+        real = int((res.programs[:, :, 0] != E.OP_NOP).sum())
+        assert total_ops == real, name
+        for cls, v in tc.items():
+            if v["ops"]:
+                assert v["p99_latency_s"] >= v["p50_latency_s"] >= 0.0
+                assert v["p99_over_p50"] >= 1.0 or v["p50_latency_s"] == 0
+        assert rep["recorded_ops"] == real
+
+
+def test_run_workload_reads_are_priced():
+    """OP_READ rows must enter the timing model (pages + latency)."""
+    eng = big_engine()
+    res, rep = S.run_workload(eng, "cache", pad_quantum=32)
+    reads = res.programs[:, :, 0] == E.OP_READ
+    assert reads.any()
+    assert (res.pages[reads] > 0).all()
+    assert (res.latencies[reads] > 0).all()
+    assert rep["tenant_classes"]["hit"]["pages"] > 0
+
+
+def test_workload_window_too_small_raises():
+    eng = make_engine(SUPERBLOCK)   # 8 zones < 2 lanes x 6-zone lsm
+    with pytest.raises(ValueError, match="6-zone window"):
+        S.run_workload(eng, "lsm")

@@ -1,0 +1,220 @@
+"""Tests for the synthetic traffic generators and the flash cache.
+
+Generators: pure functions of their seed (bit-identical streams),
+correct distribution shapes (empirical Zipf frequencies vs
+:func:`zipf_weights`, diurnal bounds and crest/trough placement, burst
+means at the 0/1 extremes), and loud validation errors.
+
+Flash cache: the recorded zone-command stream never reads an evicted
+(reset-and-not-rewritten) zone, the hit rate is monotone non-decreasing
+in the zone budget, the stats ledger is self-consistent, and the
+admission filter actually filters.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.storage as S
+from repro.core import engine as E
+from repro.core.geometry import FlashGeometry
+from repro.storage import (burst_arrivals, diurnal_load, zipf_weights,
+                           zipfian_keys, zipfian_tenants)
+
+
+# --------------------------------------------------------------------- #
+# zipf
+# --------------------------------------------------------------------- #
+def test_zipf_weights_shape():
+    w = zipf_weights(16, 1.1)
+    assert w.shape == (16,)
+    assert w.sum() == pytest.approx(1.0)
+    assert (np.diff(w) <= 0).all(), "rank 0 must be hottest"
+
+
+def test_zipf_weights_zero_skew_is_uniform():
+    w = zipf_weights(8, 0.0)
+    assert np.allclose(w, 1 / 8)
+
+
+@pytest.mark.parametrize("bad", [dict(n_keys=0, skew=1.0),
+                                 dict(n_keys=4, skew=-0.1)])
+def test_zipf_weights_validates(bad):
+    with pytest.raises(ValueError):
+        zipf_weights(**bad)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.floats(0.0, 2.0))
+def test_zipfian_keys_deterministic(seed, skew):
+    a = zipfian_keys(500, 32, skew=skew, seed=seed)
+    b = zipfian_keys(500, 32, skew=skew, seed=seed)
+    assert np.array_equal(a, b)
+    assert a.min() >= 0 and a.max() < 32
+    c = zipfian_keys(500, 32, skew=skew, seed=seed + 1)
+    assert not np.array_equal(a, c), "seed must matter"
+
+
+def test_zipfian_keys_match_weights():
+    n, n_keys, skew = 20000, 16, 1.2
+    keys = zipfian_keys(n, n_keys, skew=skew, seed=3)
+    freq = np.bincount(keys, minlength=n_keys) / n
+    want = zipf_weights(n_keys, skew)
+    assert np.abs(freq - want).max() < 0.02
+    assert freq.argmax() == 0, "key id 0 must be the hottest"
+
+
+def test_zipfian_tenants_skewed_to_tenant_zero():
+    t = zipfian_tenants(5000, 4, skew=1.0, seed=1)
+    counts = np.bincount(t, minlength=4)
+    assert counts.argmax() == 0
+    assert (counts > 0).all(), "every tenant sees some load"
+
+
+# --------------------------------------------------------------------- #
+# diurnal + burst
+# --------------------------------------------------------------------- #
+def test_diurnal_load_bounds_and_cycle():
+    lvl = diurnal_load(48, base=10, peak=100, period=24)
+    assert lvl.dtype == np.int64
+    assert lvl.min() == 10 and lvl.max() == 100
+    assert lvl[0] == 10 and lvl[12] == 100 and lvl[24] == 10
+    # periodic up to the +-1 wobble of rounding near half-integers
+    assert np.abs(lvl[:24] - lvl[24:]).max() <= 1
+
+
+def test_diurnal_load_jitter_seeded():
+    a = diurnal_load(48, base=10, peak=100, seed=7, jitter=0.2)
+    b = diurnal_load(48, base=10, peak=100, seed=7, jitter=0.2)
+    assert np.array_equal(a, b)
+    assert (a >= 0).all()
+    assert not np.array_equal(
+        a, diurnal_load(48, base=10, peak=100, seed=8, jitter=0.2))
+
+
+def test_diurnal_load_validates():
+    with pytest.raises(ValueError, match="peak"):
+        diurnal_load(10, base=5, peak=4)
+    with pytest.raises(ValueError, match="seed"):
+        diurnal_load(10, base=5, peak=9, jitter=0.1)
+
+
+def test_burst_arrivals_deterministic_and_bursty():
+    a = burst_arrivals(200, rate=4, seed=5)
+    assert np.array_equal(a, burst_arrivals(200, rate=4, seed=5))
+    assert a.dtype == np.int64 and (a >= 0).all()
+    quiet = burst_arrivals(2000, rate=4, burst_prob=0.0, seed=0)
+    assert quiet.mean() == pytest.approx(4.0, rel=0.1)
+    loud = burst_arrivals(2000, rate=4, burst_prob=1.0, burst_mult=8,
+                          seed=0)
+    assert loud.mean() == pytest.approx(32.0, rel=0.1)
+    assert loud.mean() > 4 * quiet.mean()
+
+
+def test_burst_arrivals_validates():
+    with pytest.raises(ValueError, match="burst_prob"):
+        burst_arrivals(10, rate=2, burst_prob=1.5)
+
+
+# --------------------------------------------------------------------- #
+# flash cache invariants (on the recording backend)
+# --------------------------------------------------------------------- #
+def cache_flash():
+    return FlashGeometry(n_channels=2, ways_per_channel=1,
+                         blocks_per_lun=8, pages_per_block=4,
+                         page_bytes=4096)
+
+
+def cache_recorder(n_zones=10, zone_pages=32, max_active=6, **kw):
+    return S.RecordingBackend(cache_flash(), zone_pages=zone_pages,
+                              n_zones=n_zones, max_active=max_active,
+                              **kw)
+
+
+def run_cache(seed, capacity, *, n_accesses=400, admission_misses=1):
+    rec = cache_recorder()
+    cache = S.record_cache(rec, n_accesses=n_accesses, n_keys=48,
+                           skew=1.1, seed=seed, capacity_zones=capacity,
+                           obj_pages=4, admission_misses=admission_misses)
+    return rec, cache
+
+
+def test_cache_never_reads_evicted_zones():
+    """Every recorded READ targets a zone holding live data (written
+    since its last RESET) -- eviction must invalidate residents."""
+    for seed in range(4):
+        rec, _ = run_cache(seed, capacity=4)
+        live = {}
+        for op, zone, n, _flags, _tenant in rec.program().tolist():
+            if op == E.OP_WRITE:
+                live[zone] = live.get(zone, 0) + n
+            elif op == E.OP_RESET:
+                live[zone] = 0
+            elif op == E.OP_READ:
+                assert live.get(zone, 0) > 0, \
+                    f"seed {seed}: read from evicted zone {zone}"
+
+
+def test_cache_hit_rate_monotone_in_capacity():
+    for seed in range(6):
+        rates = [run_cache(seed, c)[1].stats.hit_rate
+                 for c in (3, 4, 5, 6, 8)]
+        assert rates == sorted(rates), f"seed {seed}: {rates}"
+        assert rates[-1] > 0.5, f"seed {seed}: skewed stream must hit"
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([3, 5, 8]))
+def test_cache_stats_ledger(seed, capacity):
+    rec, cache = run_cache(seed, capacity)
+    s = cache.stats
+    assert s.hits + s.misses == 400
+    assert s.admitted + s.rejected <= s.misses
+    assert s.read_pages == s.hits * 4, "uniform 4-page objects"
+    assert s.write_pages == s.admitted * 4
+    assert s.evicted_objects >= s.evicted_zones
+    prog = rec.program()
+    resets = int((prog[:, 0] == E.OP_RESET).sum())
+    assert resets == s.evicted_zones
+    reads = prog[prog[:, 0] == E.OP_READ]
+    assert int(reads[:, 2].sum()) == s.read_pages
+
+
+def test_cache_admission_filter():
+    # a stream of all-distinct keys never sees a second miss per key,
+    # so admission_misses=2 admits nothing
+    rec = cache_recorder()
+    cache = S.FlashCache(rec, S.CacheConfig(
+        capacity_zones=5, obj_pages=4, admission_misses=2))
+    cache.run(np.arange(100))
+    assert cache.stats.admitted == 0
+    assert cache.stats.rejected == 100
+    assert cache.stats.hit_rate == 0.0
+    assert len(rec) == 0, "nothing admitted -> nothing recorded"
+
+
+def test_cache_config_validates():
+    with pytest.raises(ValueError, match="capacity_zones"):
+        S.CacheConfig(capacity_zones=2, n_bins=2)
+    with pytest.raises(ValueError, match="admission_misses"):
+        S.CacheConfig(capacity_zones=4, admission_misses=0)
+
+
+def test_cache_tags_hit_and_admit_classes():
+    rec = cache_recorder(class_tenants={"admit": 0, "hit": 1})
+    S.record_cache(rec, n_accesses=200, n_keys=24, seed=0,
+                   capacity_zones=5, obj_pages=4)
+    prog = rec.program()
+    reads = prog[prog[:, 0] == E.OP_READ]
+    writes = prog[prog[:, 0] == E.OP_WRITE]
+    assert len(reads) and (reads[:, 4] == 1).all(), "hits tagged 'hit'"
+    assert len(writes) and (writes[:, 4] == 0).all(), \
+        "admissions tagged 'admit'"
+
+
+def test_cache_report_keys():
+    _, cache = run_cache(0, capacity=5)
+    rep = cache.report()
+    for key in ("hit_rate", "hits", "misses", "evicted_zones"):
+        assert key in rep
+    assert rep["hit_rate"] == pytest.approx(cache.stats.hit_rate)

@@ -36,6 +36,13 @@ Two tracked trajectories, each written as a JSON artifact:
   asserted bit-identical to the object oracle first -- plus a
   rebuild-storm subsection asserted recompile-stable across repeated
   same-shape dispatches.
+  Since PR 9 a ``trace`` section records real application traffic
+  (ZoneFS/LSM compactions, checkpoint bursts, a Zipfian flash cache)
+  through the :class:`repro.storage.RecordingBackend` trace compiler
+  and replays the compiled op programs through ONE batched dispatch vs
+  the identical op streams through the per-op legacy device -- gate:
+  >= 5x with zero recompiles across repeated same-shape dispatches,
+  after asserting per-lane DLWA agreement.
 
 * ``BENCH_paper.json`` -- the paper's three headline claims as
   SilentZNS-policy vs traditional-mapping lane pairs over one shared
@@ -79,8 +86,9 @@ from repro.fleet.search import fleet_vs_legacy_speedup  # noqa: E402
 # bump when the artifact layout changes in a way bench_table must
 # know about (2: run provenance stamped in meta; obs_overhead section;
 # 3: array section + scaled legacy fleet timing; 4: BENCH_paper.json
-# headline artifact)
-SCHEMA_VERSION = 4
+# headline artifact; 5: trace section -- compiled app workloads vs the
+# legacy per-op replay)
+SCHEMA_VERSION = 5
 
 
 def _git_sha() -> str:
@@ -301,6 +309,108 @@ def _bench_array(args) -> dict:
     return rep
 
 
+def _trace_recorders(eng, quick: bool):
+    """Record the three application workloads (seed-varied instances)
+    into op programs; each recorder is one independent device lane."""
+    import repro.storage as S
+    from repro.storage.compile import _lsm_jobs
+
+    n_inst = 1 if quick else 2
+    recs, labels = [], []
+    for inst in range(n_inst):
+        for name in ("lsm", "ckpt", "cache"):
+            rec = S.RecordingBackend(
+                eng.flash, zone_pages=eng.cfg.zone_pages,
+                n_zones=eng.cfg.n_zones, max_active=eng.cfg.max_active)
+            if name == "lsm":
+                cfg = S.scaled_kv_config(
+                    rec.zone_pages, eng.flash.page_bytes, seed=inst,
+                    n_flushes=6 if quick else 10,
+                    max_jobs=_lsm_jobs(rec))
+                S.LSMSimulator(S.ZoneFS(rec), cfg).run()
+            elif name == "ckpt":
+                S.record_checkpoints(rec, S.CheckpointSchedule(
+                    n_steps=10 if quick else 24, shards=3, seed=inst))
+            else:
+                S.record_cache(rec, n_accesses=600 if quick else 2000,
+                               n_keys=64, seed=inst,
+                               capacity_zones=min(6, rec.n_zones),
+                               obj_pages=4)
+            recs.append(rec)
+            labels.append(f"{name}{inst}")
+    return recs, labels
+
+
+def _legacy_replay_trace(eng, rec) -> float:
+    """Replay one recorder's rows through the per-op legacy device;
+    return its final DLWA (the exactness oracle)."""
+    from repro.core import engine as zengine
+    from repro.core.device_legacy import LegacyZNSDevice
+
+    leg = LegacyZNSDevice(eng.flash, eng.zone_geom, eng.spec,
+                          max_active=eng.cfg.max_active)
+    for op, zone, n, flags, _tenant in rec.program().tolist():
+        if op == zengine.OP_WRITE:
+            leg.zone_write(zone, n, host=bool(flags & zengine.F_HOST))
+        elif op == zengine.OP_FINISH:
+            leg.zone_finish(zone)
+        elif op == zengine.OP_RESET:
+            leg.zone_reset(zone)
+        elif op == zengine.OP_READ:
+            leg.zone_read(zone, np.arange(n))
+    return leg.dlwa
+
+
+def _bench_trace(args) -> dict:
+    """PR 9's comparator: ZoneFS/LSM, checkpoint-burst, and flash-cache
+    traffic compiled to op programs and replayed through ONE batched
+    dispatch vs the same op streams through the per-op legacy device,
+    plus a zero-recompile probe across repeated same-shape dispatches."""
+    import repro.storage as S
+    from repro.core import engine as zengine
+    from repro.core import timing as ctiming
+    from repro.core.elements import SUPERBLOCK
+    from repro.core.engine import ZoneEngine
+    from repro.core.geometry import FlashGeometry, ZoneGeometry
+    from repro.obs.profile import RecompileCounter
+
+    flash = FlashGeometry(n_channels=4, ways_per_channel=1,
+                          blocks_per_lun=32, pages_per_block=4,
+                          page_bytes=4096)
+    eng = ZoneEngine(flash, ZoneGeometry(parallelism=4, n_segments=2),
+                     SUPERBLOCK, max_active=8)
+    recs, labels = _trace_recorders(eng, bool(args.quick))
+    n_ops = float(sum(len(r) for r in recs))
+
+    counter = RecompileCounter(run_programs=zengine.run_programs,
+                               simulate_fleet_ops=ctiming.simulate_fleet_ops)
+    res = S.replay_recorders(eng, recs, n_tenants=1)   # warm/compile
+    # exactness before timing: every compiled lane's DLWA must equal
+    # the legacy per-op replay of the identical op stream
+    t0 = time.perf_counter()
+    legacy_dlwa = [_legacy_replay_trace(eng, rec) for rec in recs]
+    legacy_s = time.perf_counter() - t0
+    for lane, (rec, want) in enumerate(zip(recs, legacy_dlwa)):
+        got = S.lane_metrics(eng, res, lane)["dlwa"]
+        assert abs(got - want) < 1e-12, \
+            f"lane {labels[lane]}: engine dlwa {got} != legacy {want}"
+
+    before = counter.counts()
+    engine_s = min(_timed(S.replay_recorders, eng, recs)
+                   for _ in range(args.repeats))
+    recompiles = float(sum(counter.delta(before).values()))
+    return {
+        "n_lanes": float(len(recs)),
+        "workloads": labels,
+        "recorded_ops": n_ops,
+        "legacy_s": legacy_s,
+        "engine_s": engine_s,
+        "speedup": legacy_s / engine_s if engine_s else float("inf"),
+        "recompiles": recompiles,
+        "lane_dlwa": [float(d) for d in legacy_dlwa],
+    }
+
+
 def bench_fleet(args) -> int:
     from repro.core.elements import BLOCK, SUPERBLOCK, vchunk
     from repro.core.engine import ZoneEngine
@@ -348,6 +458,10 @@ def bench_fleet(args) -> int:
     # the rebuild-storm recompile-stability probe
     arr = _bench_array(args)
 
+    # PR 9: application traces (LSM/checkpoint/flash-cache) compiled to
+    # op programs and batch-replayed vs the per-op legacy device
+    trace = _bench_trace(args)
+
     artifact = {
         "fleet_sweep": rep,
         "mixed_spec": mixed,
@@ -355,6 +469,7 @@ def bench_fleet(args) -> int:
         "obs_overhead": overhead,
         "evaluator_recompiles": recomp,
         "array": arr,
+        "trace": trace,
         "meta": _meta(repeats=args.repeats, quick=bool(args.quick),
                       legacy_timed_configs=rep["legacy_timed_configs"],
                       legacy_scale=rep["legacy_scale"],
@@ -390,6 +505,11 @@ def bench_fleet(args) -> int:
           f"storm {arr['storm']['n_scenarios']:.0f} scenarios in "
           f"{arr['storm']['dispatch_s']:.2f}s, "
           f"{arr['storm']['recompiles']:.0f} recompile(s)")
+    print(f"trace: {trace['n_lanes']:.0f} workload lanes "
+          f"({trace['recorded_ops']:.0f} recorded ops), legacy "
+          f"{trace['legacy_s']:.2f}s vs engine {trace['engine_s']:.2f}s "
+          f"-> speedup {trace['speedup']:.1f}x, "
+          f"{trace['recompiles']:.0f} recompile(s)")
     print(f"wrote {args.fleet_out}")
     rc = 0
     # PR 3's acceptance bar: batched fleet sweep >= 5x
@@ -419,6 +539,16 @@ def bench_fleet(args) -> int:
     if arr["storm"]["recompiles"] != 0:
         print("WARNING: rebuild-storm dispatch recompiled on a repeated "
               "same-shape call", file=sys.stderr)
+        rc = 1
+    # PR 9's acceptance bars: compiled app traces >= 5x over the per-op
+    # legacy replay, dispatch shape-stable across repeats
+    if trace["speedup"] < 5.0:
+        print("WARNING: trace-compile speedup below the 5x target",
+              file=sys.stderr)
+        rc = 1
+    if trace["recompiles"] != 0:
+        print("WARNING: trace replay recompiled on a repeated same-shape "
+              "dispatch", file=sys.stderr)
         rc = 1
     return rc
 
