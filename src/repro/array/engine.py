@@ -509,14 +509,18 @@ class ArrayEngine:
         return [zengine.encode_program(rows, width=TENANT_COL + 1)
                 for rows in self._rows]
 
-    def run(self, *, obs=None, pad_quantum: int = 1) -> ArrayResult:
+    def run(self, *, obs=None, pad_quantum: int = 1,
+            sanitize: bool = False) -> ArrayResult:
         """Execute the array's full compiled history from a blank shared
         state: ONE batched ``run_programs`` dispatch over the member
         lanes (``obs`` threads the in-scan telemetry recorder through
         it).  Illegal rows cannot occur -- commands were validated at
-        compile time -- and that is asserted, not assumed."""
+        compile time -- and that is asserted, not assumed; ``sanitize``
+        additionally audits the final member device states with the
+        :mod:`repro.check` sanitizer."""
         res = run_array_batch([self], obs=obs,
-                              pad_quantum=pad_quantum)[0]
+                              pad_quantum=pad_quantum,
+                              sanitize=sanitize)[0]
         return res
 
     def result(self) -> ArrayResult:
@@ -617,7 +621,8 @@ class ArrayEngine:
 # batched sweeps: K arrays in one dispatch
 # --------------------------------------------------------------------- #
 def run_array_batch(arrays: Sequence[ArrayEngine], *, obs=None,
-                    pad_quantum: int = 1) -> List[ArrayResult]:
+                    pad_quantum: int = 1,
+                    sanitize: bool = False) -> List[ArrayResult]:
     """Execute K arrays' member lanes in ONE ``run_programs`` dispatch.
 
     All arrays must share one ``ZoneEngine`` (they may still mix member
@@ -626,6 +631,9 @@ def run_array_batch(arrays: Sequence[ArrayEngine], *, obs=None,
     own ``DynConfig``).  ``pad_quantum`` rounds the padded op axis so
     repeated same-scale batches hit one compiled shape.  Each array's
     result is installed (so ``report()`` works) and returned in order.
+    ``sanitize`` audits every member lane's final device state with the
+    :mod:`repro.check` sanitizer (host-side numpy on the already-
+    fetched states; no extra compilations).
     """
     if not arrays:
         return []
@@ -646,8 +654,8 @@ def run_array_batch(arrays: Sequence[ArrayEngine], *, obs=None,
                         dtype=np.int32)
     for i, p in enumerate(lane_programs):
         programs[i, : len(p)] = p
-    out = eng.run_batch(eng.init_state(), programs, stack_dyn(dyns),
-                        obs=obs)
+    dyn = stack_dyn(dyns)
+    out = eng.run_batch(eng.init_state(), programs, dyn, obs=obs)
     states, trace = out[0], out[1]
     telemetry = out[2] if obs is not None else None
 
@@ -655,6 +663,9 @@ def run_array_batch(arrays: Sequence[ArrayEngine], *, obs=None,
     # one device->host transfer per leaf here; per-member report
     # slicing is then pure numpy views
     states = jax.tree_util.tree_map(np.asarray, states)
+    if sanitize:
+        from repro.check import assert_states
+        assert_states(eng.cfg, states, dyn, where="array batch states")
     results = []
     lo = 0
     for a in arrays:

@@ -1,0 +1,26 @@
+"""Static analysis over the op-program IR: the :mod:`verifier` predicts
+per-op legality (bit-identical to the engine's ``trace.ok``) plus
+derived reports without dispatching anything; the :mod:`sanitizer`
+checks :class:`~repro.core.engine.DeviceState` invariants between
+dispatches; :mod:`lint` is the AST-based JAX-pitfall repo lint behind
+``tools/lint.py``.  Pure numpy / stdlib on host values -- importing or
+running any of it triggers zero jit compilations.
+"""
+
+from repro.check.sanitizer import (SanitizerError, assert_state,
+                                   assert_states, check_state,
+                                   check_states)
+from repro.check.verifier import (ERR_ACTIVE_LIMIT, ERR_ALLOC_INFEASIBLE,
+                                  ERR_FULL, ERR_OVERFLOW,
+                                  ERR_UNMAPPED_READ, OpVerdict,
+                                  ProgramReport, explain_op,
+                                  validate_rows, verify_program,
+                                  verify_programs)
+
+__all__ = [
+    "ERR_ACTIVE_LIMIT", "ERR_ALLOC_INFEASIBLE", "ERR_FULL",
+    "ERR_OVERFLOW", "ERR_UNMAPPED_READ", "OpVerdict", "ProgramReport",
+    "SanitizerError", "assert_state", "assert_states", "check_state",
+    "check_states", "explain_op", "validate_rows", "verify_program",
+    "verify_programs",
+]

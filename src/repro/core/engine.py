@@ -382,6 +382,31 @@ def make_dyn(cfg: EngineConfig, *, zone_pages: Optional[int] = None,
     )
 
 
+def dyn_values(cfg: EngineConfig, dyn: Optional[DynConfig] = None,
+               lane: Optional[int] = None) -> dict:
+    """Host-side snapshot of the *effective* value-only configuration.
+
+    Returns the :class:`DynConfig` fields as plain Python ints/bools
+    (``cfg``'s own values when ``dyn`` is ``None``); ``lane`` selects
+    one row of a stacked (:func:`stack_dyn`) DynConfig.  This is the
+    bridge the static checkers in :mod:`repro.check` use to read a
+    dispatch's per-lane geometry without touching traced values.
+    """
+    if dyn is None:
+        dyn = make_dyn(cfg)
+    out = {}
+    for name, leaf in zip(DynConfig._fields, dyn):
+        v = np.asarray(leaf)
+        if lane is not None and v.ndim > 0:
+            v = v[lane]
+        if v.ndim != 0:
+            raise ValueError(
+                f"dyn field {name!r} has shape {v.shape}; pass lane= "
+                f"to select one row of a stacked DynConfig")
+        out[name] = bool(v) if v.dtype == np.bool_ else int(v)
+    return out
+
+
 def stack_dyn(dyns: Sequence[DynConfig]) -> DynConfig:
     """Stack per-lane :class:`DynConfig`\\ s along a leading batch axis
     (the shape ``run_programs`` consumes for a heterogeneous batch)."""

@@ -57,6 +57,11 @@ class FleetResult:
     #: per-lane telemetry stack (repro.obs TelemetryState with (L, ...)
     #: leaves) when the dispatch ran with obs=ObsConfig(...), else None
     telemetry: Optional[object] = None
+    #: the dispatch's static config + per-lane DynConfig (when known):
+    #: what lets assert_all_ok replay a failing lane through the
+    #: repro.check verifier and name the predicted error class
+    cfg: Optional[zengine.EngineConfig] = None
+    dyn: Optional[DynConfig] = None
 
     @property
     def tenants(self) -> np.ndarray:
@@ -223,12 +228,12 @@ def run_fleet(eng: ZoneEngine, programs: np.ndarray, *,
         return _decode_fleet(programs, states, trace, dummy, pages,
                              completions, latencies, makespans,
                              n_tenants, parity_tenant, elem_mask,
-                             telemetry)
+                             telemetry, eng.cfg, dyn)
 
 
 def _decode_fleet(programs, states, trace, dummy, pages, completions,
                   latencies, makespans, n_tenants, parity_tenant,
-                  elem_mask, telemetry) -> FleetResult:
+                  elem_mask, telemetry, cfg=None, dyn=None) -> FleetResult:
     return FleetResult(
         programs=programs,
         states=states,
@@ -244,6 +249,8 @@ def _decode_fleet(programs, states, trace, dummy, pages, completions,
         parity_tenant=parity_tenant,
         elem_mask=elem_mask,
         telemetry=telemetry,
+        cfg=cfg,
+        dyn=dyn,
     )
 
 
@@ -300,12 +307,31 @@ def assert_all_ok(res: FleetResult, lanes: Optional[np.ndarray] = None
                   ) -> None:
     """Raise if any *real* op (non-NOP) was illegal -- a mis-built
     fleet program (overflow, active-zone limit) should fail loudly in
-    tests and benchmarks, not skew metrics silently."""
+    tests and benchmarks, not skew metrics silently.
+
+    When the result carries its dispatch config (``res.cfg`` /
+    ``res.dyn``, populated by :func:`run_fleet`), the first failing op
+    is replayed through the :mod:`repro.check` verifier and the
+    exception names the op kind, zone, and predicted error class with
+    the shim's message -- not just the raw row."""
     sel = slice(None) if lanes is None else lanes
     real = res.programs[sel, :, 0] != zengine.OP_NOP
     bad = real & ~res.ok[sel]
-    if bad.any():
-        lane, idx = np.argwhere(bad)[0]
-        raise AssertionError(
-            f"illegal op at lane {lane} index {idx}: "
-            f"{res.programs[sel][lane, idx].tolist()}")
+    if not bad.any():
+        return
+    lane, idx = np.argwhere(bad)[0]
+    row = res.programs[sel][lane, idx]
+    msg = (f"illegal op at lane {lane} index {idx}: {row.tolist()}")
+    if res.cfg is not None:
+        # absolute lane on the dispatch axis (``lanes`` may be a subset)
+        abs_lane = int(np.arange(len(res.programs))[sel][lane])
+        from repro.check import explain_op
+        stacked = (res.dyn is not None
+                   and np.asarray(res.dyn.zone_pages).ndim > 0)
+        v = explain_op(res.cfg, res.programs[abs_lane], int(idx),
+                       res.dyn, lane=abs_lane if stacked else None)
+        if not v.ok:
+            msg = (f"illegal {v.op_name} at lane {lane} index {idx} "
+                   f"(zone {v.zone}): predicted error class "
+                   f"'{v.error}' -- {v.message}; row {row.tolist()}")
+    raise AssertionError(msg)

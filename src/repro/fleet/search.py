@@ -395,12 +395,15 @@ class Evaluator:
     def __init__(self, eng: ZoneEngine, *, n_devices: int = 4,
                  weights: Tuple[float, float, float] = (1.0, 1.0, 1.0),
                  check_legal: bool = True, pad_quantum: int = 64,
-                 profiler=None):
+                 profiler=None, sanitize: bool = False):
         from repro.obs.profile import RecompileCounter
         self.eng = eng
         self.n_devices = n_devices
         self.weights = tuple(weights)
         self.check_legal = check_legal
+        # opt-in repro.check device-state audit after every dispatch
+        # (host-side numpy on fetched values: no extra compilations)
+        self.sanitize = sanitize
         self.pad_quantum = max(1, pad_quantum)
         self.profiler = profiler
         self.recompiles = RecompileCounter(
@@ -436,6 +439,10 @@ class Evaluator:
                                profiler=self.profiler)
         if self.check_legal:
             runner.assert_all_ok(res)
+        if self.sanitize:
+            from repro.check import assert_states
+            assert_states(self.eng.cfg, res.states, dyn,
+                          where="Evaluator dispatch states")
         self.n_dispatches += 1
         self.n_evals += fidelity * len(configs)
         self.lane_ops += runner.dispatch_cost(res)

@@ -46,6 +46,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.check import assert_states, validate_rows
 from repro.core import engine as zengine
 from repro.core.device import ZoneInfo, ZoneState
 from repro.core.engine import DynConfig, ZoneEngine, stack_dyn
@@ -317,7 +318,8 @@ def replay_recorders(eng: ZoneEngine,
                      n_tenants: int = 1,
                      parity_tenant: Optional[int] = None,
                      pad_quantum: int = 64, obs=None, profiler=None,
-                     check: bool = True) -> runner.FleetResult:
+                     check: bool = True,
+                     sanitize: bool = False) -> runner.FleetResult:
     """Execute every recorder's compiled program as ONE batched fleet
     dispatch (one lane per recorder).
 
@@ -329,8 +331,22 @@ def replay_recorders(eng: ZoneEngine,
     section timers through, exactly as in
     :func:`repro.fleet.runner.run_fleet`.  ``check`` asserts every real
     replayed op was legal -- a recorder/engine divergence fails loudly.
+    ``sanitize`` additionally audits every lane's final device state
+    with the :mod:`repro.check` sanitizer (host-side numpy; no extra
+    compilations).
+
+    Malformed rows (op code outside the IR, negative zone/page counts,
+    tenant tags outside the class range) are rejected with a
+    ``ValueError`` *before* dispatch: inside the batched scan they
+    would not fail, they alias (op/zone clipping) or walk pointers
+    backwards -- scan-time garbage with no error at all.
     """
-    programs = [r.program() for r in recorders]
+    programs = [np.asarray(r.program(), dtype=np.int32)
+                for r in recorders]
+    for k, p in enumerate(programs):
+        validate_rows(p, n_tenants=n_tenants,
+                      parity_tenant=parity_tenant,
+                      where=f"recorder {k} program")
     q = max(1, pad_quantum)
     n_ops = -(-max((len(p) for p in programs), default=1) // q) * q
     batch = pad_programs(programs, n_ops=max(n_ops, q))
@@ -345,6 +361,8 @@ def replay_recorders(eng: ZoneEngine,
                            profiler=profiler)
     if check:
         runner.assert_all_ok(res)
+    if sanitize:
+        assert_states(eng.cfg, res.states, dyn, where="replay states")
     return res
 
 
@@ -623,19 +641,22 @@ def workload_programs(eng: ZoneEngine, name: str, *, n_lanes: int = 2,
 
 def run_workload(eng: ZoneEngine, name: str, *, n_lanes: int = 2,
                  seed: int = 0, pad_quantum: int = 64, obs=None,
-                 profiler=None) -> Tuple[runner.FleetResult, Dict]:
+                 profiler=None, sanitize: bool = False
+                 ) -> Tuple[runner.FleetResult, Dict]:
     """Record workload ``name``, execute it as ONE class-tagged batched
     dispatch, and roll up per-tenant-class p99 predictability.
 
     Returns ``(FleetResult, report)`` where ``report`` carries one
     entry per traffic class (ops, pages, p50/p99/max latency,
     ``p99_over_p50`` predictability) plus dispatch-level totals -- the
-    artifact ``fleet_search.py --workload`` writes and CI uploads."""
+    artifact ``fleet_search.py --workload`` writes and CI uploads.
+    Rows are pre-validated and (with ``sanitize=True``) the final
+    device states audited, as in :func:`replay_recorders`."""
     classes = WORKLOADS[name]
     recs = workload_programs(eng, name, n_lanes=n_lanes, seed=seed)
     res = replay_recorders(eng, recs, n_tenants=len(classes),
                            pad_quantum=pad_quantum, obs=obs,
-                           profiler=profiler)
+                           profiler=profiler, sanitize=sanitize)
     report = {
         "workload": name,
         "n_lanes": float(len(recs)),

@@ -6,6 +6,10 @@ import jax
 import jax.numpy as jnp
 from hypothesis import given, settings, strategies as st
 
+from repro.core import engine as E
+from repro.core.elements import BLOCK, SUPERBLOCK, hchunk, vchunk
+from repro.core.engine import ZoneEngine
+from repro.core.geometry import FlashGeometry, ZoneGeometry
 from repro.kernels.zns_alloc.ops import zns_alloc
 from repro.kernels.zns_alloc.ref import zns_alloc_ref
 from repro.kernels.flash_attention.ops import attention
@@ -59,6 +63,51 @@ def test_zns_alloc_matches_exact_dp(seed):
     assert bool(feas) == dp.feasible
     if dp.feasible:
         assert float(wear[np.asarray(sel)].sum()) == pytest.approx(dp.cost)
+
+
+_ALLOC_SPECS = [BLOCK, vchunk(2), hchunk(2), SUPERBLOCK]
+
+
+@pytest.mark.parametrize("seed", range(5))
+@pytest.mark.parametrize("spec", _ALLOC_SPECS, ids=lambda s: s.name)
+def test_zns_alloc_matches_engine_claim(spec, seed):
+    """The kernel's per-group lowest-(wear, col) selection is exactly
+    the element set a wear-aware traditional ALLOC claims for a fresh
+    zone, and its feasibility flag is exactly the op's ok verdict."""
+    eng = ZoneEngine(FlashGeometry(4, 1, 8, 4, 4096), ZoneGeometry(4, 2),
+                     spec, max_active=3, wear_aware=True)
+    cfg = eng.cfg
+    # with the round-robin window spanning every group, the rr pass and
+    # its cheapest-groups fallback see the same eligibility, so kernel
+    # feasibility on the all-groups mask is exactly the engine's; a
+    # full-capacity zone also claims all `take` ranks per group
+    assert cfg.zone_groups == cfg.n_groups
+    assert cfg.n_slots == cfg.take * cfg.zone_groups
+
+    rng = np.random.default_rng(1234 * (seed + 1) + cfg.n_elements)
+    n = cfg.n_elements
+    wear = np.zeros(n + 1, np.int32)
+    wear[:n] = rng.integers(0, 50, n)
+    avail = np.zeros(n + 1, np.int32)
+    avail[:n] = rng.choice([0, 1, 2, 3], n)
+    state = eng.init_state()._replace(
+        elem_wear=jnp.asarray(wear), elem_avail=jnp.asarray(avail))
+
+    prog = np.asarray([[E.OP_ALLOC, 0, 0, 0]], np.int32)
+    after, trace = eng.run(state, prog)
+
+    wear2d = wear[:n].reshape(cfg.n_groups, cfg.per_group)
+    avail2d = avail[:n].reshape(cfg.n_groups, cfg.per_group)
+    sel, feas = zns_alloc(jnp.asarray(wear2d), jnp.asarray(avail2d),
+                          jnp.ones(cfg.n_groups, bool), take=cfg.take,
+                          impl="pallas")
+    assert bool(trace.ok[0]) == bool(feas)
+    if bool(feas):
+        g, c = np.nonzero(np.asarray(sel, bool))
+        kernel_ids = set((g * cfg.per_group + c).tolist())
+        row = np.asarray(after.zone_elems)[0]
+        engine_ids = {int(e) for e in row if e >= 0}
+        assert engine_ids == kernel_ids
 
 
 # --------------------------------------------------------------------- #

@@ -333,7 +333,10 @@ def test_replay_recorders_checks_divergence():
     rec.zone_write(0, 4)
     # corrupt a row: this write overflows the zone
     rec._rows.append((E.OP_WRITE, 0, eng.cfg.zone_pages, E.F_HOST, 0))
-    with pytest.raises(AssertionError, match="illegal op"):
+    # the failure is routed through the verifier: error class + the
+    # shim's exact message, not just a lane/index coordinate
+    with pytest.raises(AssertionError,
+                       match=r"illegal WRITE .*error class 'overflow'"):
         S.replay_recorders(eng, [rec], n_tenants=1)
 
 

@@ -119,6 +119,42 @@ def _meta(**extra) -> dict:
     }
 
 
+def _sanitize_audit(policies=("traditional", "silent")) -> dict:
+    """End-state invariant audit accompanying an artifact: drive a
+    canonical fill/finish/reset cycle per alloc policy on the bench
+    geometry and run every final device state through the
+    :mod:`repro.check` sanitizer.  Raises ``SanitizerError`` on any
+    violation; returns the summary stamped into the artifact."""
+    from repro.check import assert_states
+    from repro.core import engine as zengine
+    from repro.core.elements import SUPERBLOCK
+    from repro.core.engine import ZoneEngine
+    from repro.core.geometry import FlashGeometry, ZoneGeometry
+
+    flash = FlashGeometry(n_channels=4, ways_per_channel=1,
+                          blocks_per_lun=32, pages_per_block=4,
+                          page_bytes=4096)
+    eng = ZoneEngine(flash, ZoneGeometry(parallelism=4, n_segments=2),
+                     SUPERBLOCK, max_active=8)
+    zp = eng.cfg.zone_pages
+    ops = []
+    for z in range(3):
+        ops += [(zengine.OP_WRITE, z, zp // 2, zengine.F_HOST),
+                (zengine.OP_FINISH, z, 0, 0)]
+    ops += [(zengine.OP_RESET, 0, 0, 0),
+            (zengine.OP_WRITE, 0, zp, zengine.F_HOST)]
+    program = np.asarray(ops, dtype=np.int32)
+    dyns = [eng.dyn(alloc_policy=p) for p in policies]
+    programs = np.broadcast_to(program, (len(dyns),) + program.shape)
+    states, trace = eng.run_batch(eng.init_state(), np.ascontiguousarray(
+        programs), zengine.stack_dyn(dyns))
+    assert bool(np.asarray(trace.ok).all()), "audit program illegal?"
+    assert_states(eng.cfg, states, zengine.stack_dyn(dyns),
+                  where="bench sanitize audit")
+    return {"checked": True, "lanes": float(len(dyns)),
+            "policies": list(policies)}
+
+
 def bench_engine(args) -> int:
     occs = (np.linspace(0.1, 0.9, 5) if args.quick
             else np.linspace(0.05, 0.95, 16))
@@ -156,6 +192,8 @@ def bench_engine(args) -> int:
         "meta": _meta(occupancies=len(occs), concurrencies=list(concs),
                       repeats=args.repeats),
     }
+    if args.sanitize:
+        artifact["sanitize"] = _sanitize_audit()
     args.out.write_text(json.dumps(artifact, indent=2) + "\n")
     for name in ("dlwa", "interference"):
         row = artifact[name]
@@ -185,7 +223,7 @@ def bench_engine(args) -> int:
     return rc
 
 
-def _obs_overhead(eng, repeats: int) -> dict:
+def _obs_overhead(eng, repeats: int, sanitize: bool = False) -> dict:
     """Telemetry-on vs telemetry-off wall time of the same warmed
     batched ``run_fleet`` dispatch (8 configs x 4 devices)."""
     import gc
@@ -210,7 +248,12 @@ def _obs_overhead(eng, repeats: int) -> dict:
         jax.block_until_ready(res.completions)
         return res
 
-    once(None), once(obs)  # warm both jit variants
+    warm = (once(None), once(obs))  # warm both jit variants
+    if sanitize:
+        from repro.check import assert_states
+        for res in warm:
+            assert_states(eng.cfg, res.states, dyn,
+                          where="obs-overhead warm states")
     # paired back-to-back measurements with GC parked, summarized as
     # the median of per-pair ratios: the dispatch is ~0.2s, where one
     # scheduler hiccup or GC pause swings a min-of-N ratio past the
@@ -242,7 +285,8 @@ def _timed(fn, *fn_args) -> float:
     return time.perf_counter() - t0
 
 
-def _evaluator_recompiles(eng, generations: int = 4) -> dict:
+def _evaluator_recompiles(eng, generations: int = 4,
+                          sanitize: bool = False) -> dict:
     """Jit-cache growth across repeated same-shape Evaluator
     generations -- flat after generation 1 means the dispatch surface
     is shape-stable (pad_quantum doing its job)."""
@@ -251,7 +295,8 @@ def _evaluator_recompiles(eng, generations: int = 4) -> dict:
 
     configs = grid_space(segments=(22, 11), chunks=(1536,),
                          parities=(False, True), wear=(True,))[:4]
-    ev = Evaluator(eng, n_devices=2, profiler=Profiler())
+    ev = Evaluator(eng, n_devices=2, profiler=Profiler(),
+                   sanitize=sanitize)
     per_gen = []
     for _ in range(generations):
         ev.evaluate(configs)
@@ -384,7 +429,8 @@ def _bench_trace(args) -> dict:
 
     counter = RecompileCounter(run_programs=zengine.run_programs,
                                simulate_fleet_ops=ctiming.simulate_fleet_ops)
-    res = S.replay_recorders(eng, recs, n_tenants=1)   # warm/compile
+    res = S.replay_recorders(eng, recs, n_tenants=1,   # warm/compile
+                             sanitize=bool(args.sanitize))
     # exactness before timing: every compiled lane's DLWA must equal
     # the legacy per-op replay of the identical op stream
     t0 = time.perf_counter()
@@ -451,8 +497,9 @@ def bench_fleet(args) -> int:
     # PR 6 flight recorder: telemetry carried through the scan must
     # stay within 10% of the bare dispatch, and repeated same-shape
     # Evaluator generations must not grow the jit cache
-    overhead = _obs_overhead(eng, repeats=args.repeats)
-    recomp = _evaluator_recompiles(eng)
+    overhead = _obs_overhead(eng, repeats=args.repeats,
+                             sanitize=bool(args.sanitize))
+    recomp = _evaluator_recompiles(eng, sanitize=bool(args.sanitize))
 
     # PR 7: engine-native ZNS-RAID vs the object ZNSArray replay, plus
     # the rebuild-storm recompile-stability probe
@@ -476,6 +523,8 @@ def bench_fleet(args) -> int:
                       array_legacy_timed=arr["legacy_timed_arrays"],
                       array_legacy_scale=arr["legacy_scale"]),
     }
+    if args.sanitize:
+        artifact["sanitize"] = _sanitize_audit()
     args.fleet_out.write_text(json.dumps(artifact, indent=2) + "\n")
     print(f"fleet: {rep['n_configs']:.0f} configs x "
           f"{rep['n_devices']:.0f} devices, "
@@ -601,6 +650,8 @@ def bench_paper(args) -> int:
         exec_cycles=2 if args.quick else 4)
     report["meta"] = _meta(quick=bool(args.quick),
                            occupancies=len(occs))
+    if args.sanitize:
+        report["sanitize"] = _sanitize_audit()
     args.paper_out.write_text(json.dumps(report, indent=2) + "\n")
 
     d, w, x = report["dlwa"], report["wear"], report["exec"]
@@ -632,6 +683,11 @@ def main() -> int:
     ap.add_argument("--repeats", type=int, default=3)
     ap.add_argument("--quick", action="store_true",
                     help="smaller sweeps (CI smoke)")
+    ap.add_argument("--sanitize", action="store_true",
+                    help="run repro.check's DeviceState sanitizer on the "
+                         "warm dispatch states and stamp an end-state "
+                         "invariant audit into each artifact (timed "
+                         "repeats stay un-sanitized)")
     ap.add_argument("--skip-engine", action="store_true")
     ap.add_argument("--skip-fleet", action="store_true")
     ap.add_argument("--skip-paper", action="store_true")
